@@ -1,0 +1,38 @@
+"""Fig 3: convergence curves (greedy-policy ART vs real env interactions)
+for DQL vs HL under each constraint / user count.
+
+Emits CSV (results/fig3_curves.csv): algo,users,constraint,steps,art
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.paper_tables import load_results
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results",
+                   "fig3_curves.csv")
+
+
+def main():
+    rows = load_results()
+    if not rows:
+        print("no cached results; run benchmarks.table6 --full first")
+        return
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    n_pts = 0
+    with open(OUT, "w") as f:
+        f.write("algo,users,constraint,steps,art,optimal\n")
+        for r in rows:
+            for s, art, ok in r["history"]:
+                f.write(f"{r['algo']},{r['users']},{r['constraint']},"
+                        f"{s},{art:.2f},{int(ok)}\n")
+                n_pts += 1
+    print(f"wrote {n_pts} curve points → {OUT}")
+    # quick textual summary: first step where each curve locks onto optimal
+    for r in sorted(rows, key=lambda x: (x["users"], x["algo"])):
+        print(f"fig3 {r['algo']:3s} n={r['users']} {r['constraint']:>4s}: "
+              f"converged@{r['steps_to_converge']}")
+
+
+if __name__ == "__main__":
+    main()

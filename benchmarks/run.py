@@ -1,0 +1,134 @@
+"""Benchmark entry point — one function per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--skip-agent]
+
+Prints a ``name,us_per_call,derived`` CSV line per benchmark (harness
+contract) after each section's human-readable table.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _csv(name, us, derived):
+    print(f"CSV,{name},{us:.2f},{derived}")
+
+
+def bench_table5(run_agent: bool):
+    from benchmarks import table5
+    t0 = time.time()
+    rows = table5.main(run_agent=run_agent)
+    errs = [abs(r["art_err_pct"]) for r in rows]
+    _csv("table5_calibration", (time.time() - t0) * 1e6,
+         f"mean_abs_err_pct={np.mean(errs):.2f}")
+
+
+def bench_table6(full: bool):
+    from benchmarks import table6
+    t0 = time.time()
+    out = table6.main(full=full)
+    derived = ""
+    if out:
+        ql, dql = out
+        if ql:
+            derived = f"max_speedup_vs_QL={max(ql):.1f}x"
+    _csv("table6_convergence", (time.time() - t0) * 1e6, derived)
+
+
+def bench_table7(full: bool):
+    from benchmarks import table7
+    t0 = time.time()
+    table7.main(full=False)  # renders cache; --full implies table6 ran
+    _csv("table7_time", (time.time() - t0) * 1e6, "see table above")
+
+
+def bench_fig3():
+    from benchmarks import fig3
+    t0 = time.time()
+    fig3.main()
+    _csv("fig3_curves", (time.time() - t0) * 1e6, "results/fig3_curves.csv")
+
+
+def bench_roofline():
+    import os
+    from benchmarks import roofline
+    path = "results/dryrun_single.jsonl"
+    if not os.path.exists(path):
+        print("(no dry-run records; run repro.launch.dryrun first)")
+        return
+    t0 = time.time()
+    rows = roofline.main(path, out_md="results/roofline.md")
+    _csv("roofline", (time.time() - t0) * 1e6,
+         f"{len(rows)}_combos->results/roofline.md")
+
+
+def bench_kernels():
+    """µs/call for the Pallas kernels (interpret mode → correctness-path
+    timing only; derived column reports the modeled FLOP count)."""
+    from repro.kernels.ops import flash_attention, wkv6
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, D = 1, 512, 4, 2, 64
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    o = flash_attention(q, k, v, q_blk=128, kv_blk=128)  # compile
+    jax.block_until_ready(o)
+    t0 = time.time()
+    for _ in range(3):
+        jax.block_until_ready(flash_attention(q, k, v, q_blk=128,
+                                              kv_blk=128))
+    us = (time.time() - t0) / 3 * 1e6
+    flops = 4 * B * S * S * H * D / 2
+    _csv("kernel_flash_attention_interpret", us, f"flops={flops:.2e}")
+
+    r = jax.random.normal(ks[0], (B, S, H, 64))
+    kk = jax.random.normal(ks[1], (B, S, H, 64))
+    vv = jax.random.normal(ks[2], (B, S, H, 64))
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, 64)))
+    u = jax.random.normal(ks[4], (H, 64)) * 0.5
+    o = wkv6(r, kk, vv, lw, u)
+    jax.block_until_ready(o)
+    t0 = time.time()
+    for _ in range(3):
+        jax.block_until_ready(wkv6(r, kk, vv, lw, u))
+    us = (time.time() - t0) / 3 * 1e6
+    _csv("kernel_wkv6_interpret", us, "state_dim=64x64")
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    run_agent = "--skip-agent" not in sys.argv and full
+    print("=" * 72)
+    print("Table V (decisions / ART / AA)")
+    print("=" * 72)
+    bench_table5(run_agent)
+    print("=" * 72)
+    print("Table VI (steps to optimal policy)")
+    print("=" * 72)
+    bench_table6(full)
+    print("=" * 72)
+    print("Table VII (training time)")
+    print("=" * 72)
+    bench_table7(full)
+    print("=" * 72)
+    print("Fig 3 (convergence curves)")
+    print("=" * 72)
+    bench_fig3()
+    print("=" * 72)
+    print("Roofline (from dry-run artifacts)")
+    print("=" * 72)
+    bench_roofline()
+    print("=" * 72)
+    print("Pallas kernels (interpret mode)")
+    print("=" * 72)
+    bench_kernels()
+
+
+if __name__ == "__main__":
+    main()

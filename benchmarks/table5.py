@@ -1,0 +1,100 @@
+"""Table V: orchestration decisions / ART / AA per scenario × constraint.
+
+Two parts:
+  (1) calibration check — our latency model's brute-force optimum vs every
+      published Table V cell (ART error %),
+  (2) agent check — the trained HL agent's greedy decisions vs the
+      brute-force optimum ("100% prediction accuracy" claim, §IV-B1).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.agent import HLAgent, HLHyperParams, ConvergenceTracker
+from repro.env.edge_cloud import (EdgeCloudEnv, EnvConfig,
+                                  brute_force_optimal, decision_string)
+from repro.env.scenarios import SCENARIOS, CONSTRAINTS, CONSTRAINT_ORDER
+
+# published Table V (ART ms, AA %) for 5 users
+PAPER_TABLE5 = {
+    ("A", "Min"): (72.08, 72.80), ("A", "80%"): (103.88, 81.11),
+    ("A", "85%"): (143.81, 85.06), ("A", "89%"): (269.80, 89.10),
+    ("A", "Max"): (418.91, 89.90),
+    ("B", "Min"): (106.76, 72.80), ("B", "80%"): (139.92, 83.23),
+    ("B", "85%"): (176.21, 85.05), ("B", "89%"): (303.50, 89.10),
+    ("B", "Max"): (472.88, 89.90),
+    ("C", "Min"): (119.28, 72.80), ("C", "80%"): (149.52, 81.11),
+    ("C", "85%"): (190.76, 85.47), ("C", "89%"): (318.45, 89.10),
+    ("C", "Max"): (464.59, 89.90),
+    ("D", "Min"): (158.53, 72.80), ("D", "80%"): (182.53, 81.12),
+    ("D", "85%"): (225.32, 85.06), ("D", "89%"): (356.75, 89.10),
+    ("D", "Max"): (506.62, 89.90),
+}
+
+
+def calibration_table(n_users: int = 5):
+    rows = []
+    for s in "ABCD":
+        for c in CONSTRAINT_ORDER:
+            opt = brute_force_optimal(SCENARIOS[s], CONSTRAINTS[c], n_users)
+            p_art, p_aa = PAPER_TABLE5[(s, c)]
+            rows.append({
+                "scenario": s, "constraint": c,
+                "model_art": opt["art"], "model_aa": opt["acc"],
+                "paper_art": p_art, "paper_aa": p_aa,
+                "art_err_pct": 100 * (opt["art"] - p_art) / p_art,
+                "decisions": decision_string(opt["actions"]),
+            })
+    return rows
+
+
+def agent_vs_optimal(scenario: str = "A", constraint: str = "89%",
+                     n_users: int = 5, seed: int = 0):
+    """Train the HL agent and compare its greedy round to brute force."""
+    env = EdgeCloudEnv(EnvConfig(SCENARIOS[scenario], CONSTRAINTS[constraint],
+                                 n_users=n_users, seed=seed))
+    tracker = ConvergenceTracker(
+        EdgeCloudEnv(EnvConfig(SCENARIOS[scenario], CONSTRAINTS[constraint],
+                               n_users=n_users, seed=seed + 90)), patience=4)
+    hp = HLHyperParams(seed=seed, epochs=400,
+                       eps_decay_steps=1000 * n_users, k_best=4,
+                       n_suggest=2 * n_users)
+    agent = HLAgent(env, hp)
+    res = agent.train(tracker=tracker)
+    opt = brute_force_optimal(SCENARIOS[scenario], CONSTRAINTS[constraint],
+                              n_users)
+    match = abs(res.final_art - opt["art"]) <= 0.01 * opt["art"] + 1e-9
+    return {
+        "scenario": scenario, "constraint": constraint,
+        "agent_art": res.final_art, "optimal_art": opt["art"],
+        "agent_decisions": decision_string(res.final_actions),
+        "optimal_decisions": decision_string(opt["actions"]),
+        "matches_optimal": bool(match),
+        "steps": res.steps_to_converge,
+    }
+
+
+def main(run_agent: bool = False):
+    rows = calibration_table()
+    print("Table V calibration (latency model vs paper):")
+    print(f"{'sc':3s}{'cnst':6s}{'model ART':>10s}{'paper ART':>10s}"
+          f"{'err%':>7s}  decisions")
+    errs = []
+    for r in rows:
+        errs.append(abs(r["art_err_pct"]))
+        print(f"{r['scenario']:3s}{r['constraint']:6s}"
+              f"{r['model_art']:10.2f}{r['paper_art']:10.2f}"
+              f"{r['art_err_pct']:+7.2f}  {','.join(r['decisions'])}")
+    print(f"mean|err| {np.mean(errs):.2f}%  max|err| {np.max(errs):.2f}%")
+    if run_agent:
+        res = agent_vs_optimal()
+        print("\nHL agent vs brute-force optimal (A/89%):")
+        print(" agent  :", res["agent_decisions"], f"ART {res['agent_art']:.1f}")
+        print(" optimal:", res["optimal_decisions"],
+              f"ART {res['optimal_art']:.1f}")
+        print(" match:", res["matches_optimal"])
+    return rows
+
+
+if __name__ == "__main__":
+    main(run_agent=True)

@@ -1,0 +1,100 @@
+"""Table VI: training overhead (env interactions to reach the optimal
+policy) for AutoScale/QL, AdaDeep/DQL and our HL — per users × constraint.
+
+Renders from cached results (benchmarks/paper_tables.run_grid)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.paper_tables import (PAPER_TABLE6, load_results, run_grid)
+
+
+def _steps_within(r, rtol=0.05):
+    """Steps until the greedy policy *permanently* enters the
+    [optimal, optimal·(1+rtol)] band (secondary metric for plateaued
+    cells). Requires the final policy to sit in the band — a violating
+    policy with artificially low ART does not qualify (feasible policies
+    cannot beat the optimum)."""
+    opt = r["optimal_art"]
+    hist = r.get("history", [])
+    if not hist:
+        return None
+    in_band = lambda art: opt * 0.995 <= art <= opt * (1 + rtol)
+    if not in_band(hist[-1][1]):
+        return None
+    entry = None
+    for s, art, ok in hist:
+        if in_band(art):
+            if entry is None:
+                entry = s
+        else:
+            entry = None
+    return entry
+
+
+def render(rows):
+    by = {(r["algo"], r["users"], r["constraint"]): r for r in rows}
+    print("Table VI — steps to optimal policy "
+          "(ours vs paper in brackets; '≥' = cap hit; '†N' = steps to "
+          "within 5% of optimal)")
+    print(f"{'users':>5s} {'cnst':>5s} | {'QL (AutoScale)':>18s} "
+          f"{'DQL (AdaDeep)':>18s} {'HL (ours)':>18s} | "
+          f"{'QL/HL':>7s} {'DQL/HL':>7s}")
+    speedups_ql, speedups_dql = [], []
+    for n in (3, 4, 5):
+        for c in ("Min", "80%", "85%", "Max"):
+            cells = []
+            steps = {}
+            for a in ("QL", "DQL", "HL"):
+                r = by.get((a, n, c))
+                if r is None:
+                    cells.append(f"{'—':>18s}")
+                    continue
+                s = r["steps_to_converge"]
+                if s is None:
+                    w5 = _steps_within(r)
+                    txt = (f"†{format(w5, ',')}" if w5
+                           else f"≥{format(r['real_steps'], ',')}")
+                    cells.append(f"{txt:>18s}")
+                    steps[a] = None  # excluded from speedup aggregation
+                else:
+                    paper = PAPER_TABLE6.get(
+                        (n, c), (None,) * 3)[("QL", "DQL", "HL").index(a)]
+                    ptxt = f" [{paper:.0e}]" if paper else ""
+                    cells.append(f"{format(s, ',') + ptxt:>18s}")
+                    steps[a] = s
+            ok_ratio = lambda x: ("HL" in steps and steps["HL"] and
+                                  steps.get(x))
+            r1 = steps["QL"] / steps["HL"] if ok_ratio("QL") else float("nan")
+            r2 = (steps["DQL"] / steps["HL"] if ok_ratio("DQL")
+                  else float("nan"))
+            if np.isfinite(r1):
+                speedups_ql.append(r1)
+            if np.isfinite(r2):
+                speedups_dql.append(r2)
+            print(f"{n:5d} {c:>5s} | " + " ".join(cells)
+                  + f" | {r1:7.1f} {r2:7.1f}")
+    if speedups_ql:
+        print(f"\nHL speedup vs QL (AutoScale): up to {max(speedups_ql):.1f}×"
+              f" (paper: up to 166.6×)")
+    if speedups_dql:
+        print(f"HL speedup vs DQL (AdaDeep):  up to {max(speedups_dql):.1f}×"
+              f" (paper: up to 11.6×)")
+    return speedups_ql, speedups_dql
+
+
+def main(full: bool = False):
+    if full:
+        rows = run_grid()
+    else:
+        rows = load_results()
+        if not rows:
+            print("no cached results — running the HL column only "
+                  "(pass --full for all three algorithms)")
+            rows = run_grid(algos=("HL",))
+    return render(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    main(full="--full" in sys.argv)

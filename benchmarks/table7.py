@@ -1,0 +1,63 @@
+"""Table VII: training time split into Computation and Experience time.
+
+Experience time = summed simulated response time of every real request the
+agent issued (what the physical testbed would spend waiting on inferences);
+Computation time = wall-clock spent in gradient updates on this machine.
+Rendered per #users, averaged over constraints, mirroring the paper's table.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.paper_tables import load_results, run_grid
+
+PAPER_TABLE7 = {  # minutes: (QL exp, DQL exp, HL exp), totals approximate
+    3: (1.5e2, 6.8e1, 2.6e1),
+    4: (3.7e2, 1.1e2, 1.3e1),
+    5: (5.8e3, 1.8e2, 1.9e1),
+}
+
+
+def render(rows):
+    print("Table VII — training time (minutes; Comp = gradient updates, "
+          "Exp = simulated request time)")
+    print(f"{'users':>5s} {'algo':>5s} {'Comp':>9s} {'Exp':>10s} "
+          f"{'Total':>10s}   paper Exp")
+    for n in (3, 4, 5):
+        for a in ("QL", "DQL", "HL"):
+            rs = [r for r in rows if r["algo"] == a and r["users"] == n]
+            if not rs:
+                continue
+            comp = np.mean([r["comp_time_min"] for r in rs])
+            exp = np.mean([r["exp_time_min"] for r in rs])
+            paper = PAPER_TABLE7[n][("QL", "DQL", "HL").index(a)]
+            print(f"{n:5d} {a:>5s} {comp:9.2f} {exp:10.1f} "
+                  f"{comp + exp:10.1f}   [{paper:.1e}]")
+    # headline ratios (experience-dominated, like the paper's 109.4×/7.5×)
+    for n in (5,):
+        tot = {}
+        for a in ("QL", "DQL", "HL"):
+            rs = [r for r in rows if r["algo"] == a and r["users"] == n]
+            if rs:
+                tot[a] = np.mean([r["comp_time_min"] + r["exp_time_min"]
+                                  for r in rs])
+        if "HL" in tot:
+            if "QL" in tot:
+                print(f"\nHL total-time speedup vs QL  (5 users): "
+                      f"{tot['QL'] / tot['HL']:.1f}× (paper 109.4×)")
+            if "DQL" in tot:
+                print(f"HL total-time speedup vs DQL (5 users): "
+                      f"{tot['DQL'] / tot['HL']:.1f}× (paper 7.5×)")
+
+
+def main(full: bool = False):
+    rows = run_grid() if full else load_results()
+    if rows:
+        render(rows)
+    else:
+        print("no cached results; run benchmarks.table6 --full first")
+
+
+if __name__ == "__main__":
+    import sys
+    main(full="--full" in sys.argv)

@@ -1,0 +1,61 @@
+"""Beyond-paper experiment: zero-shot scenario transfer.
+
+The Table II state encodes the network condition (weak flags), so a policy
+trained under one scenario could in principle act correctly under another
+without retraining. The paper trains per scenario; we measure how far a
+single scenario's policy generalizes — relevant for deployment, where
+network conditions drift faster than retraining cadence.
+
+    PYTHONPATH=src:. python -m benchmarks.transfer
+"""
+from __future__ import annotations
+
+from repro.core.agent import HLAgent, HLHyperParams, ConvergenceTracker
+from repro.env.edge_cloud import (EdgeCloudEnv, EnvConfig,
+                                  brute_force_optimal)
+from repro.env.scenarios import SCENARIOS, CONSTRAINTS
+
+
+def train_on(scenario: str, constraint: str, n_users: int, seeds=(0, 1, 2)):
+    for seed in seeds:
+        env = EdgeCloudEnv(EnvConfig(SCENARIOS[scenario],
+                                     CONSTRAINTS[constraint],
+                                     n_users=n_users, seed=seed))
+        tracker = ConvergenceTracker(
+            EdgeCloudEnv(EnvConfig(SCENARIOS[scenario],
+                                   CONSTRAINTS[constraint],
+                                   n_users=n_users, seed=seed + 90)),
+            patience=4)
+        agent = HLAgent(env, HLHyperParams(
+            seed=seed, epochs=600, eps_decay_steps=1200 * n_users,
+            k_best=5, n_suggest=2 * n_users, n_plan=40))
+        res = agent.train(tracker=tracker)
+        if res.steps_to_converge is not None:
+            return agent
+    return agent  # last attempt
+
+
+def main(constraint: str = "89%", n_users: int = 5,
+         train_scenario: str = "A"):
+    agent = train_on(train_scenario, constraint, n_users)
+    print(f"policy trained on scenario {train_scenario} ({constraint}, "
+          f"{n_users} users)\n")
+    print(f"{'eval sc':>8s} {'agent ART':>10s} {'optimal':>9s} "
+          f"{'gap %':>7s} {'feasible':>8s}")
+    rows = []
+    for sc in "ABCD":
+        env = EdgeCloudEnv(EnvConfig(SCENARIOS[sc], CONSTRAINTS[constraint],
+                                     n_users=n_users, seed=123))
+        info = env.rollout_greedy(agent.policy_fn)
+        opt = brute_force_optimal(SCENARIOS[sc], CONSTRAINTS[constraint],
+                                  n_users)
+        gap = 100 * (info["art"] - opt["art"]) / opt["art"]
+        rows.append((sc, info["art"], opt["art"], gap,
+                     not info["violated"]))
+        print(f"{sc:>8s} {info['art']:10.1f} {opt['art']:9.1f} "
+              f"{gap:+7.1f} {str(not info['violated']):>8s}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Compare the three RL orchestrators (HL vs DQL vs QL) head-to-head on one
+configuration — a miniature of Table VI / Fig 3.
+
+    PYTHONPATH=src python examples/compare_agents.py [--users 3]
+"""
+import argparse
+import time
+
+from repro.core.agent import HLAgent, HLHyperParams, ConvergenceTracker
+from repro.core.baselines import DQLAgent, QLAgent
+from repro.env.edge_cloud import EdgeCloudEnv, EnvConfig, brute_force_optimal
+from repro.env.scenarios import SCENARIOS, CONSTRAINTS
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--users", type=int, default=3)
+    ap.add_argument("--constraint", default="89%")
+    args = ap.parse_args()
+    n = args.users
+
+    def env(seed):
+        return EdgeCloudEnv(EnvConfig(SCENARIOS["A"],
+                                      CONSTRAINTS[args.constraint],
+                                      n_users=n, seed=seed))
+
+    opt = brute_force_optimal(SCENARIOS["A"], CONSTRAINTS[args.constraint], n)
+    print(f"optimal ART: {opt['art']:.1f} ms\n")
+    results = {}
+
+    t0 = time.time()
+    hl = HLAgent(env(0), HLHyperParams(seed=0, epochs=400,
+                                       eps_decay_steps=1000 * n, k_best=4,
+                                       n_suggest=2 * n))
+    r = hl.train(tracker=ConvergenceTracker(env(99), patience=4))
+    results["HL (ours, Deep Dyna-Q)"] = (r, time.time() - t0)
+
+    t0 = time.time()
+    dql = DQLAgent(env(1), HLHyperParams(seed=1, eps_decay_steps=6000 * n))
+    r = dql.train(tracker=ConvergenceTracker(env(98), patience=4),
+                  max_steps=150_000, eval_every=200)
+    results["DQL (AdaDeep-class)"] = (r, time.time() - t0)
+
+    t0 = time.time()
+    ql = QLAgent(env(2))
+    r = ql.train(tracker=ConvergenceTracker(env(97), patience=4),
+                 max_steps=600_000, eval_every=2000)
+    results["QL (AutoScale-class)"] = (r, time.time() - t0)
+
+    print(f"{'agent':28s} {'steps→optimal':>14s} {'final ART':>10s} "
+          f"{'wall':>6s}")
+    base = None
+    for name, (r, wall) in results.items():
+        s = r.steps_to_converge
+        stxt = format(s, ",") if s else f"≥{r.real_steps:,}"
+        print(f"{name:28s} {stxt:>14s} {r.final_art:10.1f} {wall:5.0f}s")
+        if "ours" in name and s:
+            base = s
+    if base:
+        for name, (r, _) in results.items():
+            if "ours" in name or not r.steps_to_converge:
+                continue
+            print(f"  HL is {r.steps_to_converge / base:.1f}× "
+                  f"fewer interactions than {name.split()[0]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: train the Hybrid Learning (Deep Dyna-Q) orchestrator on the
+paper's 5-user end-edge-cloud environment and inspect its decisions.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+from repro.core.agent import HLAgent, HLHyperParams, ConvergenceTracker
+from repro.core.orchestrator import IntelligentOrchestrator
+from repro.env.edge_cloud import (EdgeCloudEnv, EnvConfig,
+                                  brute_force_optimal, decision_string)
+from repro.env.scenarios import SCENARIOS, CONSTRAINTS
+
+
+def main():
+    scenario, constraint, n_users = "A", "89%", 5
+    print(f"Scenario {scenario}, accuracy constraint {constraint}, "
+          f"{n_users} users")
+
+    opt = brute_force_optimal(SCENARIOS[scenario], CONSTRAINTS[constraint],
+                              n_users)
+    print(f"brute-force optimum: ART={opt['art']:.1f} ms  "
+          f"decisions={decision_string(opt['actions'])}")
+
+    env = EdgeCloudEnv(EnvConfig(SCENARIOS[scenario],
+                                 CONSTRAINTS[constraint],
+                                 n_users=n_users, seed=0))
+    tracker = ConvergenceTracker(
+        EdgeCloudEnv(EnvConfig(SCENARIOS[scenario], CONSTRAINTS[constraint],
+                               n_users=n_users, seed=99)), patience=4)
+    agent = HLAgent(env, HLHyperParams(seed=0, epochs=400,
+                                       eps_decay_steps=1000 * n_users,
+                                       k_best=4, n_suggest=2 * n_users))
+    t0 = time.time()
+    res = agent.train(tracker=tracker)
+    print(f"\nHL agent: converged after {res.steps_to_converge} real env "
+          f"interactions ({time.time() - t0:.0f}s wall)")
+    print(f"greedy policy: ART={res.final_art:.1f} ms  "
+          f"decisions={decision_string(res.final_actions)}")
+
+    io = IntelligentOrchestrator(env, agent.policy_fn)
+    print("\nper-request orchestration decisions:")
+    for d in io.decide_round():
+        print(f"  user S{d.user + 1}: tier={d.tier:6s} variant=d{d.variant} "
+              f"expected={d.expected_ms:.1f} ms acc={d.expected_acc:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

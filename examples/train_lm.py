@@ -1,0 +1,60 @@
+"""Train a ~100M-parameter LM for a few hundred steps on the synthetic
+pipeline (loss must fall — the corpus has learnable k-gram structure).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--arch yi-6b]
+"""
+import argparse
+import time
+
+import jax
+
+from repro.checkpoint.ckpt import save
+from repro.configs import get_smoke_config
+from repro.data.pipeline import SyntheticLM
+from repro.training.optimizer import adamw
+from repro.training.schedule import cosine_with_warmup
+from repro.training.train_step import make_train_step, init_train_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="results/train_lm_final.msgpack")
+    args = ap.parse_args()
+
+    # ~100M params: widen the smoke config
+    cfg = get_smoke_config(args.arch, n_layers=4, d_model=512, d_ff=2048,
+                           n_heads=8, n_kv_heads=2, vocab_size=1024)
+    n_params = cfg.num_params()
+    print(f"arch={cfg.name} params={n_params / 1e6:.1f}M")
+
+    lr = cosine_with_warmup(3e-4, 20, args.steps)
+    opt = adamw(lr=lr, weight_decay=0.1)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    data = SyntheticLM(cfg.vocab_size, args.seq, seed=11)
+
+    t0 = time.time()
+    first = None
+    for i in range(args.steps):
+        batch = data.batch(i, args.batch)
+        state, m = step_fn(state, batch)
+        if first is None:
+            first = float(m["loss"])
+        if i % 20 == 0 or i == args.steps - 1:
+            toks = args.batch * args.seq * (i + 1)
+            print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.2f} "
+                  f"({toks / max(1e-9, time.time() - t0):.0f} tok/s)")
+    final = float(m["loss"])
+    print(f"\nloss {first:.3f} → {final:.3f} "
+          f"({'FELL ✓' if final < first - 0.5 else 'did not fall ✗'})")
+    save(args.ckpt, state)
+    print("checkpoint →", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""msgpack-based pytree checkpointing (no orbax/flax available).
+
+Saves any pytree of jnp/np arrays + python scalars. Arrays are stored as
+(dtype, shape, raw bytes); the tree structure is preserved via nested
+dict/list/tuple encoding. Restore returns jnp arrays.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_ARR = "__arr__"
+_TUP = "__tuple__"
+
+
+def _encode(obj):
+    if isinstance(obj, (jnp.ndarray, np.ndarray)) or hasattr(obj, "dtype"):
+        arr = np.asarray(obj)
+        return {_ARR: True, "dtype": str(arr.dtype), "shape": list(arr.shape),
+                "data": arr.tobytes()}
+    if isinstance(obj, dict):
+        return {k: _encode(v) for k, v in obj.items()}
+    if isinstance(obj, tuple):
+        return {_TUP: [_encode(v) for v in obj]}
+    if isinstance(obj, list):
+        return [_encode(v) for v in obj]
+    if obj is None or isinstance(obj, (bool, int, float, str, bytes)):
+        return obj
+    raise TypeError(f"cannot checkpoint {type(obj)}")
+
+
+def _decode(obj):
+    if isinstance(obj, dict):
+        if obj.get(_ARR):
+            arr = np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"]))
+            return jnp.asarray(arr.reshape(obj["shape"]))
+        if _TUP in obj:
+            return tuple(_decode(v) for v in obj[_TUP])
+        return {k: _decode(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_decode(v) for v in obj]
+    return obj
+
+
+def save(path: str, tree: Any) -> None:
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(_encode(jax.device_get(tree)),
+                              use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str) -> Any:
+    with open(path, "rb") as f:
+        return _decode(msgpack.unpackb(f.read(), raw=False,
+                                       strict_map_key=False))
+
+
+def restore_like(path: str, template: Any) -> Any:
+    """Restore and re-impose the template's tree structure (incl. NamedTuples)."""
+    flat_template, treedef = jax.tree.flatten(template)
+    restored = restore(path)
+    flat_restored = jax.tree.leaves(restored)
+    assert len(flat_restored) == len(flat_template), (
+        len(flat_restored), len(flat_template))
+    return jax.tree.unflatten(treedef, flat_restored)

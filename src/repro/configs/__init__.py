@@ -1,0 +1,50 @@
+"""Architecture registry: ``--arch <id>`` → ModelConfig.
+
+Each assigned architecture has its own module with
+  * ``config()``       — the exact published hyper-parameters, and
+  * ``smoke_config()`` — a reduced same-family variant (≤2 layers,
+    d_model ≤ 512, ≤ 4 experts) for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = (
+    "rwkv6-1.6b",
+    "mistral-nemo-12b",
+    "nemotron-4-15b",
+    "zamba2-1.2b",
+    "mixtral-8x7b",
+    "yi-6b",
+    "qwen2-vl-7b",
+    "musicgen-medium",
+    "h2o-danube-3-4b",
+    "deepseek-v2-236b",
+)
+
+
+def _module(arch_id: str):
+    mod = arch_id.replace("-", "_").replace(".", "p")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(arch_id: str, **overrides) -> ModelConfig:
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    cfg = _module(arch_id).config()
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_smoke_config(arch_id: str, **overrides) -> ModelConfig:
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    cfg = _module(arch_id).smoke_config()
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg

@@ -1,0 +1,37 @@
+"""The paper's own workload: the MobileNetV1 d0–d7 pool (Table III).
+
+Not a transformer config — this is the accuracy×latency Pareto pool the
+orchestrator schedules in the faithful reproduction. The latency numbers
+live in env/latency_model.py (calibrated to Table V); this module gives
+them a config-style face so `--arch` style tooling can enumerate the
+paper's native pool next to the assigned transformer architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.env import latency_model as lm
+
+
+@dataclasses.dataclass(frozen=True)
+class MobileNetVariant:
+    name: str
+    million_macs: int
+    int8: bool
+    accuracy: float       # % (Table III)
+    local_latency_ms: float  # calibrated end-device latency (Table V fit)
+
+
+def pool() -> tuple[MobileNetVariant, ...]:
+    return tuple(
+        MobileNetVariant(name=n, million_macs=m, int8=q, accuracy=a,
+                         local_latency_ms=float(lm.T_LOCAL[i]))
+        for i, (n, m, q, a) in enumerate(lm.MODELS))
+
+
+def tiers() -> dict:
+    """Edge/cloud serve the highest-accuracy model (d0) only (§II-B)."""
+    return {
+        "edge": {"model": "d0", "latency_ms": lm.T_EDGE_D0},
+        "cloud": {"model": "d0", "latency_ms": lm.T_CLOUD_D0},
+    }

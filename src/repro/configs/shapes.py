@@ -1,0 +1,144 @@
+"""Assigned input shapes + ShapeDtypeStruct factories for the dry-run.
+
+The four assigned shapes:
+    train_4k       seq_len=  4,096  global_batch=256   (training)
+    prefill_32k    seq_len= 32,768  global_batch= 32   (inference-prefill)
+    decode_32k     seq_len= 32,768  global_batch=128   (inference-decode)
+    long_500k      seq_len=524,288  global_batch=  1   (long-context-decode)
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStructs only — no device
+allocation, per the multi-pod dry-run contract. ``make_batch`` materializes a
+small concrete batch for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape_name: str) -> bool:
+    """long_500k requires a sub-quadratic arch (DESIGN.md §4)."""
+    if shape_name == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _mrope_positions_spec(cfg, b, s):
+    return _sds((3, b, s), jnp.int32)
+
+
+def token_specs(cfg: ModelConfig, b: int, s: int, *, with_labels: bool):
+    """Full-sequence token inputs (train / prefill)."""
+    specs = {}
+    if cfg.num_codebooks:
+        specs["tokens"] = _sds((b, cfg.num_codebooks, s), jnp.int32)
+        if with_labels:
+            specs["labels"] = _sds((b, cfg.num_codebooks, s), jnp.int32)
+    elif cfg.num_patch_positions:
+        p = cfg.num_patch_positions
+        specs["tokens"] = _sds((b, s - p), jnp.int32)
+        specs["patch_embeds"] = _sds((b, p, cfg.d_model), cfg.compute_jdtype)
+        specs["positions"] = _mrope_positions_spec(cfg, b, s)
+        if with_labels:
+            specs["labels"] = _sds((b, s), jnp.int32)
+    else:
+        specs["tokens"] = _sds((b, s), jnp.int32)
+        if with_labels:
+            specs["labels"] = _sds((b, s), jnp.int32)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, b: int, s: int):
+    """One-new-token decode against a seq_len cache."""
+    if cfg.num_codebooks:
+        token = _sds((b, cfg.num_codebooks), jnp.int32)
+    else:
+        token = _sds((b,), jnp.int32)
+    cache = jax.eval_shape(
+        lambda: tf.init_cache(cfg, b, s, dtype=cfg.compute_jdtype))
+    return {"token": token, "cache": cache}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    sh = SHAPES[shape_name]
+    if sh.mode == "train":
+        return token_specs(cfg, sh.global_batch, sh.seq_len, with_labels=True)
+    if sh.mode == "prefill":
+        return token_specs(cfg, sh.global_batch, sh.seq_len,
+                           with_labels=False)
+    if sh.mode == "decode":
+        return decode_specs(cfg, sh.global_batch, sh.seq_len)
+    raise ValueError(sh.mode)
+
+
+# ---------------------------------------------------------------------------
+# concrete batches for smoke tests
+# ---------------------------------------------------------------------------
+
+def make_batch(cfg: ModelConfig, key, b: int, s: int, *,
+               with_labels: bool = True):
+    """Materialize a small concrete batch matching token_specs."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    batch = {}
+    if cfg.num_codebooks:
+        batch["tokens"] = jax.random.randint(
+            k1, (b, cfg.num_codebooks, s), 0, cfg.vocab_size)
+        if with_labels:
+            batch["labels"] = jax.random.randint(
+                k2, (b, cfg.num_codebooks, s), 0, cfg.vocab_size)
+    elif cfg.num_patch_positions:
+        p = cfg.num_patch_positions
+        assert s > p, (s, p)
+        batch["tokens"] = jax.random.randint(k1, (b, s - p), 0,
+                                             cfg.vocab_size)
+        batch["patch_embeds"] = 0.02 * jax.random.normal(
+            k3, (b, p, cfg.d_model), cfg.compute_jdtype)
+        # M-RoPE positions: patches get a (t=0, h, w) grid; text continues
+        side = int(p ** 0.5)
+        hh, ww = jnp.meshgrid(jnp.arange(side), jnp.arange(side),
+                              indexing="ij")
+        t_img = jnp.zeros((p,), jnp.int32)
+        h_img = hh.reshape(-1).astype(jnp.int32)
+        w_img = ww.reshape(-1).astype(jnp.int32)
+        text_pos = jnp.arange(side, side + (s - p), dtype=jnp.int32)
+        pos = jnp.stack([
+            jnp.concatenate([t_img, text_pos]),
+            jnp.concatenate([h_img, text_pos]),
+            jnp.concatenate([w_img, text_pos]),
+        ])  # (3, S)
+        batch["positions"] = jnp.broadcast_to(pos[:, None], (3, b, s))
+        if with_labels:
+            batch["labels"] = jax.random.randint(k2, (b, s), 0,
+                                                 cfg.vocab_size)
+    else:
+        batch["tokens"] = jax.random.randint(k1, (b, s), 0, cfg.vocab_size)
+        if with_labels:
+            batch["labels"] = jax.random.randint(k2, (b, s), 0,
+                                                 cfg.vocab_size)
+    return batch

@@ -1,0 +1,270 @@
+"""Hybrid Learning agent — Algorithm 1 (Deep Dyna-Q) — plus the training
+harness shared with the baselines.
+
+Phases per epoch (α = epoch / N):
+  (1) Direct RL      — (1 − α/2)·N_direct sessions of T_direct real steps;
+      DQN trained on prioritized minibatches from D_direct.
+  (2) System model   — (1 − α/2)·N_world minibatch updates of System(s,a;θs)
+      from the uniform buffer D_world.
+  (3) Planning       — ((α+1)/2)·N_suggest sessions: the model proposes the
+      K most promising actions at the current state; *novel* (s, a) pairs
+      are verified with one real request each (Algorithm 1 line 29) and
+      stored in D_plan; the policy then trains on ((α+1)/2)·N_plan
+      prioritized minibatches from D_plan.
+
+As α grows the agent shifts from direct sampling to planning — the paper's
+mechanism for cutting environment interactions by 1–2 orders of magnitude.
+
+Interaction accounting: every call that touches the real environment
+(direct steps AND planning verification steps) increments ``real_steps`` —
+the quantity reported in Table VI.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dqn import make_dqn
+from repro.core.system_model import make_system_model
+from repro.core.replay import (ReplayBuffer, PrioritizedReplayBuffer,
+                               PlanBuffer)
+from repro.env.edge_cloud import EdgeCloudEnv, brute_force_optimal
+
+
+@dataclasses.dataclass
+class HLHyperParams:
+    epochs: int = 60
+    n_direct: int = 8        # direct-RL sessions per epoch (before α scaling)
+    t_direct: int = 10       # real steps per direct session
+    n_world: int = 24        # system-model minibatches per epoch
+    n_suggest: int = 6       # planning sessions per epoch
+    t_suggest: int = 5       # planning rollout length
+    n_plan: int = 24         # policy minibatches from D_plan per epoch
+    k_best: int = 3          # K most promising actions verified per state
+    batch: int = 64
+    gamma: float = 0.95
+    lr: float = 1e-3
+    model_lr: float = 2e-3
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_steps: int = 1500
+    target_sync_every: int = 4  # sessions
+    buffer_cap: int = 20000
+    hidden: tuple = (128, 128)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class TrainResult:
+    steps_to_converge: Optional[int]
+    real_steps: int
+    history: list  # [(real_steps, greedy ART, optimal?)]
+    final_art: float
+    final_actions: np.ndarray
+    compute_updates: int  # number of gradient updates (for Table VII)
+    exp_time_ms: float = 0.0  # simulated experience time (Table VII "Exp")
+    comp_time_s: float = 0.0  # wall-clock in gradient updates ("Comp")
+
+
+class ConvergenceTracker:
+    """Converged when the greedy policy's quiet-round ART is within rtol of
+    the brute-force optimum for ``patience`` consecutive evaluations."""
+
+    def __init__(self, env: EdgeCloudEnv, rtol: float = 0.01,
+                 patience: int = 3):
+        self.env = env
+        opt = brute_force_optimal(env.cfg.scenario, env.cfg.constraint,
+                                  env.cfg.n_users)
+        self.opt_art = opt["art"]
+        self.rtol = rtol
+        self.patience = patience
+        self.hits = 0
+        self.converged_at: Optional[int] = None
+        self.first_hit_steps: Optional[int] = None
+        self.history: list = []
+
+    def check(self, real_steps: int, policy_fn) -> bool:
+        info = self.env.rollout_greedy(policy_fn)
+        ok = (not info["violated"] and
+              info["art"] <= self.opt_art * (1 + self.rtol) + 1e-9)
+        self.history.append((real_steps, info["art"], bool(ok)))
+        if ok:
+            if self.hits == 0:
+                self.first_hit_steps = real_steps
+            self.hits += 1
+            if self.hits >= self.patience and self.converged_at is None:
+                self.converged_at = self.first_hit_steps
+        else:
+            self.hits = 0
+            self.first_hit_steps = None
+        return self.converged_at is not None
+
+
+class HLAgent:
+    """Deep Dyna-Q hybrid learner (the paper's contribution)."""
+
+    def __init__(self, env: EdgeCloudEnv, hp: HLHyperParams = None):
+        self.env = env
+        self.hp = hp or HLHyperParams()
+        hp = self.hp
+        self.rng = np.random.default_rng(hp.seed)
+        key = jax.random.PRNGKey(hp.seed)
+        k1, k2 = jax.random.split(key)
+        (self.dqn_init, self.q_values, self.dqn_update, self.dqn_sync,
+         self.act_greedy) = make_dqn(env.state_dim, env.n_actions,
+                                     hidden=hp.hidden, lr=hp.lr,
+                                     gamma=hp.gamma)
+        (self.sm_init, self.sm_predict, self.sm_predict_all,
+         self.sm_update) = make_system_model(env.state_dim, env.n_actions,
+                                             lr=hp.model_lr)
+        self.dqn = self.dqn_init(k1)
+        self.sm = self.sm_init(k2)
+        self.d_direct = PrioritizedReplayBuffer(hp.buffer_cap, env.state_dim,
+                                                seed=hp.seed + 1)
+        self.d_world = ReplayBuffer(hp.buffer_cap, env.state_dim,
+                                    seed=hp.seed + 2)
+        self.d_plan = PlanBuffer(hp.buffer_cap, env.state_dim,
+                                 seed=hp.seed + 3)
+        self.real_steps = 0
+        self.compute_updates = 0
+        self.exp_time_ms = 0.0   # simulated request time (Table VII "Exp")
+        self.comp_time_s = 0.0   # wall-clock spent in gradient updates
+
+    # ------------------------------------------------------------------
+    def _epsilon(self) -> float:
+        hp = self.hp
+        frac = min(1.0, self.real_steps / hp.eps_decay_steps)
+        return hp.eps_start + frac * (hp.eps_end - hp.eps_start)
+
+    def _act(self, obs) -> int:
+        if self.rng.random() < self._epsilon():
+            return int(self.rng.integers(self.env.n_actions))
+        return int(self.act_greedy(self.dqn.params, jnp.asarray(obs)))
+
+    def policy_fn(self, obs, _key=None) -> int:
+        return int(self.act_greedy(self.dqn.params, jnp.asarray(obs)))
+
+    def _plan_key(self, obs) -> tuple:
+        return tuple(np.round(np.asarray(obs), 3).tolist())
+
+    # ------------------------------------------------------------------
+    def _direct_rl_session(self, obs):
+        hp = self.hp
+        for _ in range(hp.t_direct):
+            a = self._act(obs)
+            obs2, r, done, info = self.env.step(a)
+            self.real_steps += 1
+            self.exp_time_ms += info.get("t_ms", 0.0)
+            self.d_direct.add(obs, a, r, obs2, done)
+            self.d_world.add(obs, a, r, obs2, done)
+            obs = obs2
+        if len(self.d_direct) >= hp.batch:
+            import time as _time
+            t0 = _time.perf_counter()
+            batch, idx, w = self.d_direct.sample(hp.batch)
+            self.dqn, _, td = self.dqn_update(
+                self.dqn, tuple(jnp.asarray(x) for x in batch),
+                jnp.asarray(w))
+            self.d_direct.update_priorities(idx, np.asarray(td))
+            self.comp_time_s += _time.perf_counter() - t0
+            self.compute_updates += 1
+        return obs
+
+    def _system_model_session(self):
+        hp = self.hp
+        if len(self.d_world) < hp.batch:
+            return
+        import time as _time
+        t0 = _time.perf_counter()
+        batch, _, _ = self.d_world.sample(hp.batch)
+        self.sm, _ = self.sm_update(self.sm,
+                                    tuple(jnp.asarray(x) for x in batch))
+        self.comp_time_s += _time.perf_counter() - t0
+        self.compute_updates += 1
+
+    def _planning_session(self):
+        """Algorithm 1 lines 21–33."""
+        hp = self.hp
+        plan_env = copy.deepcopy(self.env)  # independent request stream
+        obs = plan_env.observe()
+        for _ in range(hp.t_suggest):
+            r_hat, s2_hat = self.sm_predict_all(self.sm.params,
+                                                jnp.asarray(obs))
+            # rank candidates by one-step model lookahead: r̂ + γ max Q(ŝ')
+            q_next = np.asarray(
+                self.q_values(self.dqn.params, s2_hat)).max(axis=-1)
+            value = np.asarray(r_hat) + self.hp.gamma * q_next
+            order = np.argsort(-value)
+            best_a = int(order[0])
+            suggested = order[:hp.k_best]
+            key = self._plan_key(obs)
+            for a_i in suggested:
+                if self.d_plan.contains(key, a_i):
+                    continue  # line 31–32: refreshed lazily on next add
+                fork = copy.deepcopy(plan_env)
+                obs2, r, done, _info = fork.step(int(a_i))
+                self.real_steps += 1  # planning verification = real request
+                self.exp_time_ms += _info.get("t_ms", 0.0)
+                self.d_plan.add_keyed(key, obs, int(a_i), r, obs2, done)
+            # advance the planning state with the model-preferred action
+            obs, _, _, _ = plan_env.step(best_a)
+
+    def _plan_train_session(self):
+        hp = self.hp
+        if len(self.d_plan) < hp.batch:
+            return
+        import time as _time
+        t0 = _time.perf_counter()
+        batch, idx, w = self.d_plan.sample(hp.batch)
+        self.dqn, _, td = self.dqn_update(
+            self.dqn, tuple(jnp.asarray(x) for x in batch), jnp.asarray(w))
+        self.d_plan.update_priorities(idx, np.asarray(td))
+        self.comp_time_s += _time.perf_counter() - t0
+        self.compute_updates += 1
+
+    # ------------------------------------------------------------------
+    def train(self, *, tracker: ConvergenceTracker,
+              eval_every_sessions: int = 2,
+              stop_on_convergence: bool = True) -> TrainResult:
+        hp = self.hp
+        obs = self.env.reset()
+        session_count = 0
+        for epoch in range(1, hp.epochs + 1):
+            alpha = epoch / hp.epochs
+            # ---- (1) Direct RL ----
+            for _ in range(max(1, int(round((1 - alpha / 2) * hp.n_direct)))):
+                obs = self._direct_rl_session(obs)
+                session_count += 1
+                if session_count % hp.target_sync_every == 0:
+                    self.dqn = self.dqn_sync(self.dqn)
+                if session_count % eval_every_sessions == 0:
+                    if tracker.check(self.real_steps, self.policy_fn) and \
+                            stop_on_convergence:
+                        return self._result(tracker)
+            # ---- (2) System model learning ----
+            for _ in range(max(1, int(round((1 - alpha / 2) * hp.n_world)))):
+                self._system_model_session()
+            # ---- (3) Planning ----
+            for _ in range(max(1, int(round((alpha + 1) / 2 * hp.n_suggest)))):
+                self._planning_session()
+            for _ in range(max(1, int(round((alpha + 1) / 2 * hp.n_plan)))):
+                self._plan_train_session()
+            self.dqn = self.dqn_sync(self.dqn)
+            if tracker.check(self.real_steps, self.policy_fn) and \
+                    stop_on_convergence:
+                return self._result(tracker)
+        return self._result(tracker)
+
+    def _result(self, tracker: ConvergenceTracker) -> TrainResult:
+        info = self.env.rollout_greedy(self.policy_fn)
+        res = TrainResult(tracker.converged_at, self.real_steps,
+                          tracker.history, info["art"], info["actions"],
+                          self.compute_updates)
+        res.exp_time_ms = self.exp_time_ms
+        res.comp_time_s = self.comp_time_s
+        return res

@@ -1,0 +1,163 @@
+"""State-of-the-art baselines from Table I.
+
+* ``DQLAgent`` — Deep-Q learning with prioritized replay + target network but
+  NO system model / planning. Stand-in for AdaDeep [10] (Algorithm: DQL).
+* ``QLAgent``  — tabular Q-learning over the full discretized Table-II
+  observation. Stand-in for AutoScale [7] (Algorithm: QL). The table is a
+  dict keyed by the exact discrete observation tuple — no generalization,
+  which is why its step count explodes with the state space (Table VI).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agent import (ConvergenceTracker, HLHyperParams, TrainResult)
+from repro.core.dqn import make_dqn
+from repro.core.replay import PrioritizedReplayBuffer
+from repro.env.edge_cloud import EdgeCloudEnv
+
+
+class DQLAgent:
+    """Model-free DQN baseline (AdaDeep-class)."""
+
+    def __init__(self, env: EdgeCloudEnv, hp: HLHyperParams = None):
+        self.env = env
+        self.hp = hp or HLHyperParams()
+        hp = self.hp
+        self.rng = np.random.default_rng(hp.seed)
+        (self.dqn_init, _, self.dqn_update, self.dqn_sync,
+         self.act_greedy) = make_dqn(env.state_dim, env.n_actions,
+                                     hidden=hp.hidden, lr=hp.lr,
+                                     gamma=hp.gamma)
+        self.dqn = self.dqn_init(jax.random.PRNGKey(hp.seed))
+        self.buf = PrioritizedReplayBuffer(hp.buffer_cap, env.state_dim,
+                                           seed=hp.seed + 1)
+        self.real_steps = 0
+        self.compute_updates = 0
+        self.exp_time_ms = 0.0
+        self.comp_time_s = 0.0
+
+    def _epsilon(self) -> float:
+        hp = self.hp
+        frac = min(1.0, self.real_steps / hp.eps_decay_steps)
+        return hp.eps_start + frac * (hp.eps_end - hp.eps_start)
+
+    def policy_fn(self, obs, _key=None) -> int:
+        return int(self.act_greedy(self.dqn.params, jnp.asarray(obs)))
+
+    def train(self, *, tracker: ConvergenceTracker, max_steps: int = 200_000,
+              eval_every: int = 100,
+              stop_on_convergence: bool = True) -> TrainResult:
+        hp = self.hp
+        obs = self.env.reset()
+        while self.real_steps < max_steps:
+            a = (int(self.rng.integers(self.env.n_actions))
+                 if self.rng.random() < self._epsilon()
+                 else self.policy_fn(obs))
+            obs2, r, done, _info = self.env.step(a)
+            self.real_steps += 1
+            self.exp_time_ms += _info.get("t_ms", 0.0)
+            self.buf.add(obs, a, r, obs2, done)
+            obs = obs2
+            if len(self.buf) >= hp.batch and self.real_steps % 5 == 0:
+                import time as _time
+                t0 = _time.perf_counter()
+                batch, idx, w = self.buf.sample(hp.batch)
+                self.dqn, _, td = self.dqn_update(
+                    self.dqn, tuple(jnp.asarray(x) for x in batch),
+                    jnp.asarray(w))
+                self.buf.update_priorities(idx, np.asarray(td))
+                self.comp_time_s += _time.perf_counter() - t0
+                self.compute_updates += 1
+            if self.real_steps % (hp.target_sync_every * 50) == 0:
+                self.dqn = self.dqn_sync(self.dqn)
+            if self.real_steps % eval_every == 0:
+                if tracker.check(self.real_steps, self.policy_fn) and \
+                        stop_on_convergence:
+                    break
+        info = self.env.rollout_greedy(self.policy_fn)
+        res = TrainResult(tracker.converged_at, self.real_steps,
+                          tracker.history, info["art"], info["actions"],
+                          self.compute_updates)
+        res.exp_time_ms = self.exp_time_ms
+        res.comp_time_s = self.comp_time_s
+        return res
+
+
+@dataclasses.dataclass
+class QLHyperParams:
+    lr: float = 0.15
+    gamma: float = 1.0
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_steps: int = 200_000
+    seed: int = 0
+
+
+class QLAgent:
+    """Tabular Q-learning baseline (AutoScale-class)."""
+
+    def __init__(self, env: EdgeCloudEnv, hp: QLHyperParams = None):
+        self.env = env
+        self.hp = hp or QLHyperParams()
+        self.rng = np.random.default_rng(self.hp.seed)
+        self.q: dict[tuple, np.ndarray] = {}
+        self.real_steps = 0
+        self.compute_updates = 0
+        self.exp_time_ms = 0.0
+        self.comp_time_s = 0.0
+
+    def _q(self, key) -> np.ndarray:
+        tbl = self.q.get(key)
+        if tbl is None:
+            tbl = np.zeros(self.env.n_actions, np.float64)
+            self.q[key] = tbl
+        return tbl
+
+    def _epsilon(self) -> float:
+        hp = self.hp
+        frac = min(1.0, self.real_steps / hp.eps_decay_steps)
+        return hp.eps_start + frac * (hp.eps_end - hp.eps_start)
+
+    def policy_fn(self, _obs, key) -> int:
+        return int(np.argmax(self._q(key)))
+
+    def train(self, *, tracker: ConvergenceTracker, max_steps: int = 2_000_000,
+              eval_every: int = 2000,
+              stop_on_convergence: bool = True) -> TrainResult:
+        hp = self.hp
+        self.env.reset()
+        key = self.env.discrete_key()
+        while self.real_steps < max_steps:
+            q = self._q(key)
+            if self.rng.random() < self._epsilon():
+                a = int(self.rng.integers(self.env.n_actions))
+            else:
+                a = int(np.argmax(q))
+            _obs2, r, done, _info = self.env.step(a)
+            self.real_steps += 1
+            self.exp_time_ms += _info.get("t_ms", 0.0)
+            key2 = self.env.discrete_key()
+            t0 = _time.perf_counter()
+            target = r if done else r + hp.gamma * self._q(key2).max()
+            q[a] += hp.lr * (target - q[a])
+            self.comp_time_s += _time.perf_counter() - t0
+            self.compute_updates += 1
+            key = key2
+            if self.real_steps % eval_every == 0:
+                if tracker.check(self.real_steps, self.policy_fn) and \
+                        stop_on_convergence:
+                    break
+        info = self.env.rollout_greedy(self.policy_fn)
+        res = TrainResult(tracker.converged_at, self.real_steps,
+                          tracker.history, info["art"], info["actions"],
+                          self.compute_updates)
+        res.exp_time_ms = self.exp_time_ms
+        res.comp_time_s = self.comp_time_s
+        return res

@@ -1,0 +1,67 @@
+"""DQN: jitted Q-update with target network + prioritized-replay weights.
+
+Used by the HL agent's Direct-RL and Planning phases and (standalone, no
+planning) by the DQL baseline (AdaDeep's algorithm class in Table I).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.networks import init_mlp_net, apply_mlp_net
+from repro.training.optimizer import adam, apply_updates
+
+
+class DQNState(NamedTuple):
+    params: list
+    target_params: list
+    opt_state: object
+    step: jnp.ndarray
+
+
+def make_dqn(state_dim: int, n_actions: int, *, hidden=(64, 64),
+             lr: float = 1e-3, gamma: float = 0.95):
+    opt = adam(lr)
+
+    def init(key) -> DQNState:
+        params = init_mlp_net(key, (state_dim, *hidden, n_actions))
+        return DQNState(params, jax.tree.map(jnp.copy, params),
+                        opt.init(params), jnp.zeros((), jnp.int32))
+
+    def q_values(params, s):
+        return apply_mlp_net(params, s)
+
+    def loss_fn(params, target_params, batch, weights):
+        s, a, r, s2, done = batch
+        q = apply_mlp_net(params, s)
+        q_sa = jnp.take_along_axis(q, a[:, None].astype(jnp.int32), 1)[:, 0]
+        # Double DQN: online net selects, target net evaluates
+        a_star = jnp.argmax(apply_mlp_net(params, s2), axis=-1)
+        q_next = jnp.take_along_axis(apply_mlp_net(target_params, s2),
+                                     a_star[:, None], 1)[:, 0]
+        target = r + gamma * (1.0 - done) * q_next
+        td = q_sa - jax.lax.stop_gradient(target)
+        return jnp.mean(weights * jnp.square(td)), td
+
+    @jax.jit
+    def update(state: DQNState, batch, weights):
+        (loss, td), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, state.target_params, batch, weights)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        return DQNState(params, state.target_params, opt_state,
+                        state.step + 1), loss, td
+
+    @jax.jit
+    def sync_target(state: DQNState) -> DQNState:
+        return state._replace(target_params=jax.tree.map(jnp.copy,
+                                                         state.params))
+
+    @jax.jit
+    def act_greedy(params, s):
+        return jnp.argmax(apply_mlp_net(params, s[None]), axis=-1)[0]
+
+    return init, q_values, update, sync_target, act_greedy

@@ -1,0 +1,23 @@
+"""Tiny MLPs in pure JAX for the policy (DQN) and the learned system model."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mlp_net(key, sizes: tuple[int, ...], dtype=jnp.float32):
+    """sizes = (in, h1, ..., out) → list of {"w","b"} layers."""
+    params = []
+    keys = jax.random.split(key, len(sizes) - 1)
+    for k, (din, dout) in zip(keys, zip(sizes[:-1], sizes[1:])):
+        w = jax.random.normal(k, (din, dout), dtype) * (2.0 / din) ** 0.5
+        params.append({"w": w, "b": jnp.zeros((dout,), dtype)})
+    return params
+
+
+def apply_mlp_net(params, x: jnp.ndarray) -> jnp.ndarray:
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x

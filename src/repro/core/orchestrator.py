@@ -1,0 +1,88 @@
+"""Intelligent Orchestrator (Fig. 1): the trained RL policy as a serving
+component.
+
+Bridges the paper core and the serving substrate: per request (or request
+batch) the orchestrator reads the system state, queries the trained policy
+and returns an ``OrchestrationDecision`` — which tier executes (local /
+edge / cloud) and which model variant from the tier's accuracy×latency
+Pareto pool. ``variant_pool_from_roofline`` derives a transformer variant
+pool's latency table from the dry-run roofline terms, closing the loop
+between deliverables (e)/(g) and the paper's technique.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.env import latency_model as lm
+from repro.env.edge_cloud import EdgeCloudEnv
+
+
+@dataclasses.dataclass(frozen=True)
+class OrchestrationDecision:
+    user: int
+    tier: str          # "local" | "edge" | "cloud"
+    variant: int       # index into the tier's model pool
+    expected_ms: float
+    expected_acc: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelVariant:
+    name: str
+    latency_ms: float   # per-request latency on its tier
+    accuracy: float     # task accuracy (%)
+
+
+class IntelligentOrchestrator:
+    """Cloud-hosted RL orchestrator (§II-C step 3-4)."""
+
+    def __init__(self, env: EdgeCloudEnv, policy_fn: Callable):
+        self.env = env
+        self.policy_fn = policy_fn
+
+    def decide_round(self) -> list[OrchestrationDecision]:
+        """Greedy decisions for one full round of requests."""
+        info = self.env.rollout_greedy(self.policy_fn)
+        out = []
+        for i, a in enumerate(info["actions"]):
+            if a < lm.N_MODELS:
+                tier, variant = "local", int(a)
+            elif a == lm.A_EDGE:
+                tier, variant = "edge", 0
+            else:
+                tier, variant = "cloud", 0
+            out.append(OrchestrationDecision(
+                user=i, tier=tier, variant=variant,
+                expected_ms=float(lm.response_times(
+                    info["actions"], self.env.cfg.scenario.weak_s_arr(),
+                    self.env.cfg.scenario.weak_e)[i]),
+                expected_acc=float(lm.action_accuracy(info["actions"])[i]),
+            ))
+        return out
+
+
+def variant_pool_from_roofline(records: list[dict],
+                               arch: str) -> list[ModelVariant]:
+    """Derive a serving-latency pool for ``arch`` from dry-run roofline
+    records (decode shape): latency = max(compute, memory, collective)
+    term + a width-scaled family of reduced variants (the transformer
+    analogue of MobileNet's 1.0/0.75/0.5/0.25 pool)."""
+    from benchmarks.roofline import analyze_record
+    recs = [r for r in records
+            if r["arch"] == arch and r["shape"] == "decode_32k"]
+    if not recs:
+        return []
+    a = analyze_record(recs[0])
+    base_ms = 1e3 * max(a["t_compute_s"], a["t_memory_s"],
+                        a["t_collective_s"])
+    pool = []
+    for width, acc_drop in ((1.0, 0.0), (0.75, 1.7), (0.5, 5.0),
+                            (0.25, 15.7)):
+        pool.append(ModelVariant(
+            name=f"{arch}@{width:g}x",
+            latency_ms=base_ms * width ** 2,  # ~quadratic in width
+            accuracy=89.9 - acc_drop))
+    return pool

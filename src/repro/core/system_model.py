@@ -1,0 +1,68 @@
+"""Learned system model  System(s, a; θs) → (r̂, ŝ′)  (§III phase 2).
+
+A two-headed MLP on (state ⊕ one-hot action): predicts the environment's
+reward (average response time at round end; 0 mid-round) and the next state
+features. Trained on random minibatches from D_world (Algorithm 1 lines
+17–19); used in Planning to (a) simulate next states and (b) rank candidate
+actions by predicted reward (lines 23–26).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.networks import init_mlp_net, apply_mlp_net
+from repro.training.optimizer import adam, apply_updates
+
+
+class SystemModelState(NamedTuple):
+    params: list
+    opt_state: object
+    step: jnp.ndarray
+
+
+def make_system_model(state_dim: int, n_actions: int, *, hidden=(96, 96),
+                      lr: float = 1e-3):
+    opt = adam(lr)
+    out_dim = 1 + state_dim  # [r̂, ŝ′]
+
+    def init(key) -> SystemModelState:
+        params = init_mlp_net(
+            key, (state_dim + n_actions, *hidden, out_dim))
+        return SystemModelState(params, opt.init(params),
+                                jnp.zeros((), jnp.int32))
+
+    def _concat(s, a):
+        a1 = jax.nn.one_hot(a, n_actions, dtype=s.dtype)
+        return jnp.concatenate([s, a1], axis=-1)
+
+    @jax.jit
+    def predict(params, s, a):
+        """s: (B, D) float; a: (B,) int → (r̂ (B,), ŝ′ (B, D))."""
+        out = apply_mlp_net(params, _concat(s, a))
+        return out[:, 0], out[:, 1:]
+
+    @jax.jit
+    def predict_all_actions(params, s):
+        """s: (D,) → r̂ for every action (n_actions,)."""
+        sb = jnp.broadcast_to(s, (n_actions, s.shape[-1]))
+        ab = jnp.arange(n_actions)
+        out = apply_mlp_net(params, _concat(sb, ab))
+        return out[:, 0], out[:, 1:]
+
+    def loss_fn(params, batch):
+        s, a, r, s2, done = batch
+        r_hat, s2_hat = predict(params, s, a)
+        return jnp.mean(jnp.square(r_hat - r)) + jnp.mean(
+            jnp.square(s2_hat - s2))
+
+    @jax.jit
+    def update(state: SystemModelState, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        return SystemModelState(params, opt_state, state.step + 1), loss
+
+    return init, predict, predict_all_actions, update

@@ -1,0 +1,227 @@
+"""End-edge-cloud orchestration environment (the paper's MDP, §II).
+
+Episode = one *round* of inference requests: each of the n end nodes, in
+turn, gets an orchestration decision (state includes the requesting-node
+index and the partially-accumulated edge/cloud load, which is exactly what
+the 9-level P^E / P^C states of Table II expose). The terminal transition
+yields reward
+
+    r = −(ART / 100) − λ · 1[average accuracy < constraint]
+
+matching §II-B: the reward is the round's average response time, with a
+penalty on violating the accuracy threshold. Background utilization
+(P/M flags of Table II) fluctuates between rounds and perturbs latencies —
+this is what blows up the tabular (AutoScale-style) state space while the
+function-approximation agents generalize over it.
+
+The environment is deliberately numpy (sub-microsecond steps); the *agents*'
+math (DQN, system model, planning) is JAX-jitted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import numpy as np
+
+from repro.env import latency_model as lm
+from repro.env.scenarios import Scenario, CONSTRAINTS
+
+# Accuracy-constraint penalty (reward units; 1 unit = 100 ms): a fixed
+# violation charge plus a *graded* term per % of accuracy deficit. The
+# graded term is what makes the constraint learnable: random exploration
+# almost never samples a feasible round, so a flat penalty gives the agent
+# no gradient toward feasibility (observed empirically — agents converged
+# to fast-but-violating policies with a flat -10).
+PENALTY_BASE = 0.5
+PENALTY_PER_PCT = 2.0
+REWARD_SCALE = 100.0
+
+
+@dataclasses.dataclass
+class EnvConfig:
+    scenario: Scenario
+    constraint: float  # accuracy threshold in %
+    n_users: int = 5
+    bg_busy_prob: float = 0.1
+    seed: int = 0
+    quiet: bool = False  # disable background fluctuations (for eval)
+
+    def __post_init__(self):
+        self.scenario = self.scenario.for_users(self.n_users)
+
+
+class EdgeCloudEnv:
+    """Round-based multi-user orchestration MDP."""
+
+    def __init__(self, cfg: EnvConfig):
+        self.cfg = cfg
+        self.n = cfg.n_users
+        self.rng = np.random.default_rng(cfg.seed)
+        self.n_actions = lm.N_ACTIONS
+        # Table II features + requesting-user one-hot + round context
+        # (accuracy-so-far + progress). The round-average accuracy term in
+        # the reward makes the MDP non-Markovian without the last two —
+        # user i's Q-values cannot anticipate the terminal constraint
+        # penalty unless the state carries the accuracy committed so far.
+        self.state_dim = 4 * self.n + 8
+        self.reset()
+
+    # ---------------- background dynamics ----------------
+    def _sample_background(self):
+        if self.cfg.quiet:
+            z = np.zeros(self.n, bool)
+            return dict(busy_p_s=z.copy(), busy_m_s=z.copy(),
+                        busy_m_e=False, busy_m_c=False,
+                        bg_edge=0, bg_cloud=0)
+        p = self.cfg.bg_busy_prob
+        return dict(
+            busy_p_s=self.rng.random(self.n) < p,
+            busy_m_s=self.rng.random(self.n) < p,
+            busy_m_e=bool(self.rng.random() < p),
+            busy_m_c=bool(self.rng.random() < p),
+            bg_edge=int(self.rng.random() < p / 2),
+            bg_cloud=int(self.rng.random() < p / 2),
+        )
+
+    # ---------------- gym-ish API ----------------
+    def reset(self) -> np.ndarray:
+        self.bg = self._sample_background()
+        self.user = 0
+        self.actions = np.full(self.n, -1, np.int64)
+        self._charged = 0.0
+        return self.observe()
+
+    def observe(self) -> np.ndarray:
+        """Float feature vector (Table II state + requesting-node one-hot)."""
+        sc = self.cfg.scenario
+        k_edge = int((self.actions == lm.A_EDGE).sum()) + self.bg["bg_edge"]
+        k_cloud = int((self.actions == lm.A_CLOUD).sum()) + self.bg["bg_cloud"]
+        user_onehot = np.zeros(self.n)
+        user_onehot[self.user % self.n] = 1.0
+        decided = self.actions >= 0
+        acc_sum = float(lm.action_accuracy(
+            np.where(decided, self.actions, 0))[decided].sum())
+        return np.concatenate([
+            user_onehot,
+            self.bg["busy_p_s"].astype(float),
+            self.bg["busy_m_s"].astype(float),
+            sc.weak_s_arr().astype(float),
+            [min(k_edge, 8) / 8.0, float(self.bg["busy_m_e"]),
+             float(sc.weak_e)],
+            [min(k_cloud, 8) / 8.0, float(self.bg["busy_m_c"]),
+             float(sc.weak_e)],
+            # round context: accuracy committed so far + round progress
+            [acc_sum / (100.0 * self.n), self.user / self.n],
+        ]).astype(np.float32)
+
+    def discrete_key(self) -> tuple:
+        """Full-observation tuple for tabular (AutoScale-style) agents."""
+        sc = self.cfg.scenario
+        k_edge = int((self.actions == lm.A_EDGE).sum()) + self.bg["bg_edge"]
+        k_cloud = int((self.actions == lm.A_CLOUD).sum()) + self.bg["bg_cloud"]
+        decided = self.actions >= 0
+        acc_sum = float(lm.action_accuracy(
+            np.where(decided, self.actions, 0))[decided].sum())
+        return (self.user,
+                tuple(self.bg["busy_p_s"].tolist()),
+                tuple(self.bg["busy_m_s"].tolist()),
+                tuple(sc.weak_s),
+                min(k_edge, 8), self.bg["busy_m_e"], sc.weak_e,
+                min(k_cloud, 8), self.bg["busy_m_c"],
+                int(acc_sum))  # 1%-granular accuracy-so-far
+
+    def _partial_time(self, user: int) -> float:
+        """Response time of ``user``'s request under the load assigned so
+        far (dense shaping term; the terminal step corrects to the exact
+        round total so the episode return is −ART/100 − penalty)."""
+        sc = self.cfg.scenario
+        mask = self.actions >= 0
+        t = lm.response_times(np.where(mask, self.actions, 7), # placeholder
+                              sc.weak_s_arr(), sc.weak_e, **self.bg)
+        return float(t[user])
+
+    def step(self, action: int):
+        """Returns (obs, reward, done, info).
+
+        Dense shaping: each decision is immediately charged its response
+        time under the partial round assignment; the terminal transition
+        settles the difference to the true round total (contention can only
+        raise earlier users' times) and applies the accuracy penalty. The
+        episode return is exactly −(ART·n/n)/100 − λ·violation, i.e. the
+        paper's round-level reward, but with usable per-step credit.
+        """
+        assert 0 <= action < self.n_actions
+        self.actions[self.user] = action
+        t_i = self._partial_time(self.user)
+        self._charged += t_i
+        self.user += 1
+        done = self.user == self.n
+        if not done:
+            return (self.observe(), -t_i / (self.n * REWARD_SCALE), False,
+                    {"t_ms": t_i})
+        sc = self.cfg.scenario
+        times = lm.response_times(self.actions, sc.weak_s_arr(), sc.weak_e,
+                                  **self.bg)
+        art = float(times.mean())
+        acc = float(lm.action_accuracy(self.actions).mean())
+        violated = acc < self.cfg.constraint - 1e-9
+        settle = float(times.sum()) - self._charged  # contention correction
+        penalty = (PENALTY_BASE + PENALTY_PER_PCT *
+                   (self.cfg.constraint - acc)) if violated else 0.0
+        reward = -(t_i + settle) / (self.n * REWARD_SCALE) - penalty
+        info = {"art": art, "acc": acc, "violated": violated,
+                "actions": self.actions.copy(), "t_ms": t_i + max(0.0, settle)}
+        obs = self.reset()
+        return obs, reward, True, info
+
+    # ---------------- evaluation helpers ----------------
+    def rollout_greedy(self, policy_fn):
+        """One quiet round under argmax policy. Returns info dict."""
+        saved = (self.bg, self.user, self.actions.copy(),
+                 self.cfg.quiet)
+        self.cfg.quiet = True
+        self.reset()
+        obs = self.observe()
+        info = {}
+        for _ in range(self.n):
+            a = int(policy_fn(obs, self.discrete_key()))
+            obs, r, done, info = self.step(a)
+        self.cfg.quiet = saved[3]
+        self.bg, self.user, self.actions = saved[0], saved[1], saved[2]
+        return info
+
+
+def brute_force_optimal(scenario: Scenario, constraint: float,
+                        n_users: int) -> dict:
+    """Exhaustive search over the 10^n joint action space (quiet background).
+
+    This is the paper's design-time "true optimal configuration" used to
+    score agent decisions (§IV-B1).
+    """
+    sc = scenario.for_users(n_users)
+    weak_s = sc.weak_s_arr()
+    best = None
+    for joint in itertools.product(range(lm.N_ACTIONS), repeat=n_users):
+        a = np.asarray(joint)
+        acc = lm.action_accuracy(a).mean()
+        if acc < constraint - 1e-9:
+            continue
+        t = lm.response_times(a, weak_s, sc.weak_e).mean()
+        if best is None or t < best["art"] - 1e-12:
+            best = {"art": float(t), "acc": float(acc), "actions": a.copy()}
+    assert best is not None, "constraint unsatisfiable"
+    return best
+
+
+def decision_string(actions: np.ndarray) -> list[str]:
+    """Render an action vector Table-V style, e.g. ['d4, L', 'd0, E']."""
+    out = []
+    for a in actions:
+        if a < lm.N_MODELS:
+            out.append(f"d{a}, L")
+        elif a == lm.A_EDGE:
+            out.append("d0, E")
+        else:
+            out.append("d0, C")
+    return out

@@ -1,0 +1,118 @@
+"""Pallas TPU flash-attention kernel (causal, GQA, optional sliding window).
+
+TPU mapping (DESIGN.md §3): the grid is (batch·q_heads, q_blocks, kv_blocks)
+with the kv dimension sequential ("arbitrary") so the online-softmax
+statistics (m, l, acc) live in VMEM scratch across kv steps. Block shapes
+are BlockSpec-tiled to VMEM; the default 128×128 q/kv tiles keep the MXU
+matmuls 128-aligned (q_blk × d and q_blk × kv_blk). GQA is expressed in the
+k/v index_map (query head h reads kv head h // group_size) — no KV
+replication in HBM.
+
+Validated on CPU with interpret=True against ``ref.naive_attention``
+(tests/test_kernels_flash.py sweeps shapes, dtypes, windows).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int, q_blk: int,
+                  kv_blk: int, nk: int, q_off: int):
+    """One (head, q_block, kv_block) grid step."""
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (qb, d)
+    k = k_ref[0].astype(jnp.float32)                  # (kb, d)
+    v = v_ref[0].astype(jnp.float32)                  # (kb, dv)
+    s = q @ k.T                                       # (qb, kb) MXU
+
+    rows = iq * q_blk + jax.lax.broadcasted_iota(jnp.int32, (q_blk, kv_blk),
+                                                 0) + q_off
+    cols = ik * kv_blk + jax.lax.broadcasted_iota(jnp.int32, (q_blk, kv_blk),
+                                                  1)
+    mask = jnp.ones((q_blk, kv_blk), jnp.bool_)
+    if causal:
+        mask &= cols <= rows
+    if window:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           q_blk: int = 128, kv_blk: int = 128,
+                           scale: float | None = None,
+                           interpret: bool = True):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D/Dv) → (B, Sq, H, Dv).
+
+    ``interpret=True`` executes the kernel body in Python on CPU (this
+    container); on a real TPU pass interpret=False.
+    """
+    b, sq, h, d = q.shape
+    _, sk, n_kv, dv = v.shape
+    g = h // n_kv
+    scale = scale if scale is not None else d ** -0.5
+    q_blk = min(q_blk, sq)
+    kv_blk = min(kv_blk, sk)
+    assert sq % q_blk == 0 and sk % kv_blk == 0
+    nq, nk = sq // q_blk, sk // kv_blk
+    q_off = sk - sq
+
+    # kernel layout: fold heads into the leading (parallel) grid dim
+    qk = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kk = k.transpose(0, 2, 1, 3).reshape(b * n_kv, sk, d)
+    vk = v.transpose(0, 2, 1, 3).reshape(b * n_kv, sk, dv)
+
+    def kv_head(bh):  # query head bh → kv row index
+        return (bh // h) * n_kv + (bh % h) // g
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        q_blk=q_blk, kv_blk=kv_blk, nk=nk, q_off=q_off)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_blk, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, kv_blk, d),
+                         lambda bh, iq, ik: (kv_head(bh), ik, 0)),
+            pl.BlockSpec((1, kv_blk, dv),
+                         lambda bh, iq, ik: (kv_head(bh), ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_blk, dv), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk,), jnp.float32),   # running max m
+            pltpu.VMEM((q_blk,), jnp.float32),   # running sum l
+            pltpu.VMEM((q_blk, dv), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qk, kk, vk)
+    return out.reshape(b, h, sq, dv).transpose(0, 2, 1, 3)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracles for the Pallas kernels (per-kernel allclose targets).
+
+* flash attention → ``naive_attention`` (materializes full S×S scores)
+* wkv6            → ``wkv6_recurrent``  (exact per-step recurrence)
+"""
+from repro.models.attention import naive_attention  # noqa: F401
+from repro.models.rwkv6 import wkv6_recurrent  # noqa: F401
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    return naive_attention(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def wkv6_ref(r, k, v, lw, u):
+    return wkv6_recurrent(r, k, v, lw, u, init_state=None)

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid: (batch·heads, chunks) with the chunk dim sequential; the per-head
+(P, N) SSM state lives in VMEM scratch across chunk steps. Within a chunk
+everything is a (Q×Q)/(Q×N)/(Q×P) matmul (MXU): the intra-chunk masked
+quadratic form, the carried-state contribution, and the rank-Q state
+update. All decay exponents are ≤ 0 by construction (cumulative sums of
+dt·A with A < 0) — no overflow for any dt.
+
+Validated against the exact recurrence in tests/test_kernels_ssd.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, sfin_ref,
+                state_scr, *, q: int, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)    # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (Q,)
+    bm = b_ref[0, 0].astype(jnp.float32)   # (Q, N)
+    cm = c_ref[0, 0].astype(jnp.float32)   # (Q, N)
+    a = a_ref[0].astype(jnp.float32)       # scalar (negative)
+    d_skip = d_ref[0].astype(jnp.float32)  # scalar
+    state = state_scr[...]                 # (P, N)
+
+    da = dt * a                            # (Q,) ≤ 0
+    dac = jnp.cumsum(da)                   # inclusive
+
+    # intra-chunk: scores[t, s] = C_t·B_s · exp(dac_t − dac_s) · dt_s, s ≤ t
+    cb = cm @ bm.T                         # (Q, Q) MXU
+    seg = dac[:, None] - dac[None, :]      # ≤ 0 on/below diagonal
+    mask = jnp.tril(jnp.ones((q, q), jnp.bool_))
+    l_decay = jnp.where(mask, jnp.exp(jnp.where(mask, seg, 0.0)), 0.0)
+    scores = cb * l_decay * dt[None, :]
+    y = scores @ x                         # (Q, P)
+
+    # carried state: y_t += exp(dac_t) · C_t @ stateᵀ
+    y = y + jnp.exp(dac)[:, None] * (cm @ state.T)
+
+    # skip connection
+    y = y + d_skip * x
+
+    # state update: S' = exp(dac_Q) S + Σ_s dt_s exp(dac_Q − dac_s) x_s B_sᵀ
+    w = dt * jnp.exp(dac[-1] - dac)        # (Q,) safe: exponent ≤ 0
+    state_scr[...] = state * jnp.exp(dac[-1]) + (x * w[:, None]).T @ bm
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        sfin_ref[0] = state_scr[...]
+
+
+def ssd_pallas(x, dt, a, b, c, d_skip, *, chunk: int = 64,
+               interpret: bool = True):
+    """x: (B, S, H, P); dt: (B, S, H) post-softplus; a: (H,) negative;
+    b, c: (B, S, G, N) (groups broadcast to heads); d_skip: (H,).
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bb, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    hg = h // g
+    q = min(chunk, s)
+    if s % q:
+        pad = q - s % q
+        pz = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        y, fin = ssd_pallas(pz(x), pz(dt), a, pz(b), pz(c), d_skip,
+                            chunk=chunk, interpret=interpret)
+        return y[:, :s], fin
+    nc = s // q
+
+    bh = bb * h
+    xk = x.transpose(0, 2, 1, 3).reshape(bh, nc, q, p)
+    dtk = dt.transpose(0, 2, 1).reshape(bh, nc, q)
+    b_h = jnp.repeat(b, hg, axis=2).transpose(0, 2, 1, 3).reshape(
+        bh, nc, q, n)
+    c_h = jnp.repeat(c, hg, axis=2).transpose(0, 2, 1, 3).reshape(
+        bh, nc, q, n)
+    ak = jnp.broadcast_to(a[None], (bb, h)).reshape(bh)
+    dk = jnp.broadcast_to(d_skip[None], (bb, h)).reshape(bh)
+
+    kernel = functools.partial(_ssd_kernel, q=q, nc=nc)
+    y, sfin = pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda i, ci: (i, ci, 0, 0)),
+            pl.BlockSpec((1, 1, q), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, ci: (i, ci, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, ci: (i, ci, 0, 0)),
+            pl.BlockSpec((1,), lambda i, ci: (i,)),
+            pl.BlockSpec((1,), lambda i, ci: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda i, ci: (i, ci, 0, 0)),
+            pl.BlockSpec((1, p, n), lambda i, ci: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nc, q, p), x.dtype),
+            jax.ShapeDtypeStruct((bh, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xk, dtk, b_h, c_h, ak, dk)
+    y = y.reshape(bb, h, s, p).transpose(0, 2, 1, 3)
+    return y, sfin.reshape(bb, h, p, n)

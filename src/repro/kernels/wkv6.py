@@ -1,0 +1,132 @@
+"""Pallas TPU kernel for the RWKV6 chunked WKV recurrence.
+
+Grid: (batch·heads, chunks); the chunk dimension is sequential so the
+per-head (N, N) state matrix lives in VMEM scratch across chunk steps —
+the TPU-native replacement for the CUDA wkv6 kernel's per-warp state
+registers. Within a chunk the pairwise data-dependent decay products use
+*tile-referenced* exponents (every exp argument ≤ 0 ⇒ unconditionally
+stable, see models/rwkv6.py); all heavy ops are (τ×N)·(N×τ) / (Q×N)·(N×N)
+matmuls that map to the MXU.
+
+Numerics match ``ref.wkv6_recurrent`` to fp32 tolerance
+(tests/test_kernels_wkv6.py sweeps shapes/chunks/decay regimes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, sfin_ref,
+                 state_scr, *, q: int, tau: int, nc: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)   # (Q, N)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)  # ≤ 0
+    u = u_ref[0].astype(jnp.float32)    # (N,)
+    state = state_scr[...]              # (N, N)
+
+    cw = jnp.cumsum(lw, axis=0)
+    ecw = cw - lw
+
+    # per-tile outputs concatenated at the end (a sliced .at[].add inside a
+    # Pallas kernel lowers to a scatter with an empty-index constant, which
+    # pallas_call rejects).
+    low = jnp.tril(jnp.ones((tau, tau), jnp.bool_), k=-1)
+    eye = jnp.eye(tau, dtype=jnp.float32)
+    tiles = []
+    for t0 in range(0, q, tau):
+        rt = r[t0:t0 + tau]
+        kt = k[t0:t0 + tau]
+        vt = v[t0:t0 + tau]
+        # cross-chunk contribution: o_t += (r_t ⊙ exp(ecw_t)) @ S_prev
+        y_tile = (rt * jnp.exp(ecw[t0:t0 + tau])) @ state  # (τ, N)
+        if t0 > 0:
+            # off-diagonal tile: tile-start referenced exponents (≤ 0)
+            ref = ecw[t0]
+            q_t = rt * jnp.exp(ecw[t0:t0 + tau] - ref)
+            k_s = k[:t0] * jnp.exp(ref - cw[:t0])
+            a_off = q_t @ k_s.T                     # (τ, t0) MXU
+            y_tile = y_tile + a_off @ v[:t0]
+        # diagonal tile: explicit decay, strictly-lower mask + u bonus
+        dec = ecw[t0:t0 + tau][:, None] - cw[t0:t0 + tau][None, :]
+        dec = jnp.where(low[..., None], dec, 0.0)
+        a_diag = jnp.einsum("tn,tsn->ts", rt, kt[None] * jnp.exp(dec))
+        a_diag = jnp.where(low, a_diag, 0.0)
+        bonus = jnp.sum(rt * u[None] * kt, axis=-1)  # (τ,)
+        a_diag = a_diag + bonus[:, None] * eye
+        tiles.append(y_tile + a_diag @ vt)
+    y = tiles[0] if len(tiles) == 1 else jnp.concatenate(tiles, axis=0)
+
+    # state update: S' = diag(exp(cw_Q)) S + Σ_s exp(cw_Q − cw_s) k_s v_sᵀ
+    cw_last = cw[-1]
+    kdec = k * jnp.exp(cw_last[None] - cw)
+    state_scr[...] = state * jnp.exp(cw_last)[:, None] + kdec.T @ v
+
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+    @pl.when(c == nc - 1)
+    def _emit_state():
+        sfin_ref[0] = state_scr[...]
+
+
+def wkv6_pallas(r, k, v, lw, u, *, chunk: int = 64, tile: int = 16,
+                interpret: bool = True):
+    """r/k/v/lw: (B, S, H, N); u: (H, N) → (o (B,S,H,N), state (B,H,N,N)).
+
+    Initial state is zero (prefill semantics); decode uses the recurrent
+    reference path. S is padded to a chunk multiple internally (exact:
+    zero k/v/r and zero log-decay contribute nothing).
+    """
+    b, s, h, n = r.shape
+    q = min(chunk, s)
+    if s % q:
+        pad = q - s % q
+        pz = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        o, fin = wkv6_pallas(pz(r), pz(k), pz(v), pz(lw), u, chunk=chunk,
+                             tile=tile, interpret=interpret)
+        return o[:, :s], fin
+    tau = min(tile, q)
+    assert q % tau == 0
+    nc = s // q
+
+    def to_kernel(a):  # (B,S,H,N) → (B*H, NC, Q, N)
+        return a.transpose(0, 2, 1, 3).reshape(b * h, nc, q, n)
+
+    rk, kk, vk, lwk = map(to_kernel, (r, k, v, lw))
+    ub = jnp.broadcast_to(u[None], (b, h, n)).reshape(b * h, n)
+
+    kernel = functools.partial(_wkv6_kernel, q=q, tau=tau, nc=nc)
+    o, sfin = pl.pallas_call(
+        kernel,
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, n), lambda bh, c: (bh, c, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda bh, c: (bh, c, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda bh, c: (bh, c, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda bh, c: (bh, c, 0, 0)),
+            pl.BlockSpec((1, n), lambda bh, c: (bh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, n), lambda bh, c: (bh, c, 0, 0)),
+            pl.BlockSpec((1, n, n), lambda bh, c: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, nc, q, n), r.dtype),
+            jax.ShapeDtypeStruct((b * h, n, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(rk, kk, vk, lwk, ub)
+    o = o.reshape(b, h, s, n).transpose(0, 2, 1, 3)
+    return o, sfin.reshape(b, h, n, n)

@@ -1,0 +1,298 @@
+"""Multi-pod dry-run: prove every (arch × shape × mesh) lowers AND compiles.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun_results.json
+
+For each combination this lowers the real train/prefill/serve step with
+ShapeDtypeStruct inputs (no allocation), compiles it for the production
+mesh, and records memory_analysis + cost_analysis + the collective-op bytes
+parsed from the optimized HLO — the inputs to the §Roofline analysis.
+"""
+# The dry-run (and ONLY the dry-run) needs 512 placeholder host devices.
+# These two lines MUST run before any other import that touches jax.
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, input_specs, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tf
+from repro.serving.engine import make_serve_step
+from repro.sharding import policy
+from repro.training.optimizer import adamw
+from repro.training.train_step import make_train_step, init_train_state
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in optimized HLO.
+
+    Builds a symbol table of instruction result shapes, then looks up each
+    collective's operand names. Returns {op_kind: bytes, "total": bytes}.
+    """
+    shape_re = re.compile(r"%?([\w.\-]+)\s*=\s*\(?([a-z0-9]+)\[([\d,]*)\]")
+    sizes: dict[str, int] = {}
+    for m in shape_re.finditer(hlo_text):
+        name, dt, dims = m.groups()
+        nbytes = _DTYPE_BYTES.get(dt)
+        if nbytes is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        sizes[name] = n * nbytes
+
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    line_re = re.compile(
+        r"=\s*\(?[a-z0-9]+\[[\d,]*\][^=]*?\b(" + "|".join(COLLECTIVE_OPS)
+        + r")(?:-start)?\(([^)]*)\)")
+    for line in hlo_text.splitlines():
+        m = line_re.search(line)
+        if not m:
+            continue
+        kind, operands = m.groups()
+        counts[kind] += 1
+        for op in operands.split(","):
+            op = op.strip().lstrip("%")
+            if op in sizes:
+                out[kind] += sizes[op]
+    out_total = sum(out.values())
+    return {"bytes": out, "counts": counts, "total": out_total}
+
+
+def _sharding_tree(spec_tree, mesh):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_lowerable(arch: str, shape_name: str, mesh, *,
+                    seq_parallel: bool = True):
+    """Returns (jitted_fn, example_args) ready to .lower().
+
+    seq_parallel: shard the residual stream's sequence dim over the model
+    axis (Megatron SP). Off = the naive baseline recorded in §Perf.
+    """
+    sh = SHAPES[shape_name]
+    key = jax.random.PRNGKey(0)
+    ax = policy.mesh_axes(mesh)
+    dp = ax.dp_spec
+    residual = None
+    if seq_parallel and sh.mode in ("train", "prefill"):
+        residual = (dp, "model", None)
+    cfg0 = get_config(arch)
+    moe_buf = moe_hidden = None
+    if cfg0.moe is not None:
+        g_ax = dp if sh.mode in ("train", "prefill") else None
+        if cfg0.moe.num_experts % mesh.shape["model"] == 0:
+            # expert parallelism: shard E over "model"
+            moe_buf = (g_ax, "model", None, None)
+            moe_hidden = (g_ax, "model", None, None)
+        else:
+            # tensor parallelism inside experts: shard F over "model"
+            moe_buf = (g_ax, None, None, None)
+            moe_hidden = (g_ax, None, None, "model")
+    cfg = get_config(arch, param_dtype="bfloat16", compute_dtype="bfloat16",
+                     residual_spec=residual, moe_buf_spec=moe_buf,
+                     moe_hidden_spec=moe_hidden)
+
+    params_sds = jax.eval_shape(lambda k: tf.init_params(k, cfg), key)
+    pspecs = policy.param_specs(cfg, params_sds, mesh,
+                                inference=sh.mode != "train")
+    pshard = _sharding_tree(pspecs, mesh)
+    batch_sds = input_specs(cfg, shape_name)
+
+    if sh.mode == "train":
+        # microbatching for combos whose activations exceed HBM otherwise
+        grad_accum = {"deepseek-v2-236b": 8, "mixtral-8x7b": 4,
+                      "qwen2-vl-7b": 2,
+                      "mistral-nemo-12b": 2}.get(arch, 1)
+        opt = adamw(3e-4)
+        state_sds = jax.eval_shape(
+            lambda k: init_train_state(k, cfg, opt), key)
+        ospecs = policy.opt_state_specs(pspecs, params_sds, mesh, zero1=True)
+        state_specs = type(state_sds)(pspecs, ospecs, P())
+        state_shard = _sharding_tree(state_specs, mesh)
+        bspecs = policy.batch_specs(cfg, batch_sds, mesh)
+        bshard = _sharding_tree(bspecs, mesh)
+        metrics_shard = {k: NamedSharding(mesh, P())
+                         for k in ("loss", "ce", "aux", "grad_norm")}
+        step = make_train_step(cfg, opt, remat=True,
+                               grad_specs=ospecs.mu, grad_accum=grad_accum)
+        jitted = jax.jit(step, in_shardings=(state_shard, bshard),
+                         out_shardings=(state_shard, metrics_shard),
+                         donate_argnums=(0,))
+        return jitted, (state_sds, batch_sds)
+
+    if sh.mode == "prefill":
+        cache_sds = jax.eval_shape(
+            lambda: tf.init_cache(cfg, sh.global_batch, sh.seq_len,
+                                  dtype=cfg.compute_jdtype))
+        cspecs = policy.cache_specs(cfg, cache_sds, mesh,
+                                    batch=sh.global_batch)
+        cshard = _sharding_tree(cspecs, mesh)
+        bspecs = policy.batch_specs(cfg, batch_sds, mesh)
+        bshard = _sharding_tree(bspecs, mesh)
+        b_ax = bspecs["tokens"][0]
+        logits_shard = NamedSharding(
+            mesh, P(b_ax, None, "model") if cfg.num_codebooks
+            else P(b_ax, "model"))
+
+        def prefill_fn(params, batch):
+            return tf.prefill(params, cfg, batch["tokens"],
+                              positions=batch.get("positions"),
+                              patch_embeds=batch.get("patch_embeds"),
+                              max_len=sh.seq_len)
+
+        jitted = jax.jit(prefill_fn, in_shardings=(pshard, bshard),
+                         out_shardings=(logits_shard, cshard))
+        return jitted, (params_sds, batch_sds)
+
+    # decode
+    cache_sds = batch_sds["cache"]
+    token_sds = batch_sds["token"]
+    cspecs = policy.cache_specs(cfg, cache_sds, mesh, batch=sh.global_batch)
+    cshard = _sharding_tree(cspecs, mesh)
+    tspec = policy.token_decode_spec(cfg, sh.global_batch, mesh)
+    tshard = NamedSharding(mesh, tspec)
+    b_ax = tspec[0] if len(tspec) else None
+    logits_shard = NamedSharding(
+        mesh, P(b_ax, None, "model") if cfg.num_codebooks
+        else P(b_ax, "model"))
+    serve = make_serve_step(cfg, sample="greedy")
+
+    def serve_fn(params, token, cache):
+        return serve(params, token, cache)
+
+    jitted = jax.jit(serve_fn, in_shardings=(pshard, tshard, cshard),
+                     out_shardings=(tshard, logits_shard, cshard),
+                     donate_argnums=(2,))
+    return jitted, (params_sds, token_sds, cache_sds)
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            seq_parallel: bool = True) -> dict:
+    from repro.sharding.runtime import set_mesh_info
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_mesh_info(mesh)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    with mesh:
+        jitted, args = build_lowerable(arch, shape_name, mesh,
+                                       seq_parallel=seq_parallel)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        coll = parse_collective_bytes(compiled.as_text())
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "seq_parallel": bool(seq_parallel),
+        "grad_accum": ({"deepseek-v2-236b": 8, "mixtral-8x7b": 4,
+                        "qwen2-vl-7b": 2,
+                        "mistral-nemo-12b": 2}.get(arch, 1)
+                       if shape_name.startswith("train") else 1),
+        "mesh": list(mesh.devices.shape),
+        "n_devices": int(n_dev),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops": float(cost.get("flops", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", -1)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", -1)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", -1)),
+            "generated_code_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", -1)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", -1)),
+        },
+        "collectives": coll,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2-pod 512-chip mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--no-seq-parallel", action="store_true",
+                    help="disable sequence-parallel residual sharding "
+                         "(the naive §Perf baseline)")
+    args = ap.parse_args()
+
+    combos = []
+    archs = (args.arch,) if args.arch else ARCH_IDS
+    shapes = (args.shape,) if args.shape else list(SHAPES)
+    meshes = ((False, True) if args.both_meshes
+              else ((args.multi_pod,),)[0] if isinstance(args.multi_pod, tuple)
+              else (args.multi_pod,))
+    for a in archs:
+        cfg = get_config(a)
+        for s in shapes:
+            if not shape_applicable(cfg, s):
+                print(f"SKIP  {a} × {s} (long_500k needs sub-quadratic; "
+                      f"see DESIGN.md §4)")
+                continue
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    results, failures = [], []
+    for a, s, mp in combos:
+        tag = f"{a} × {s} × {'2x16x16' if mp else '16x16'}"
+        try:
+            rec = run_one(a, s, multi_pod=mp,
+                          seq_parallel=not args.no_seq_parallel)
+            mem = rec["memory"]
+            per_dev = (mem["argument_bytes"] + mem["output_bytes"]
+                       + mem["temp_bytes"] - mem["alias_bytes"])
+            print(f"OK    {tag}: compile={rec['compile_s']}s "
+                  f"flops={rec['flops']:.3e} "
+                  f"coll={rec['collectives']['total']:.3e}B "
+                  f"mem/dev≈{per_dev/2**30:.2f}GiB")
+            results.append(rec)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+        except Exception as e:  # noqa: BLE001
+            print(f"FAIL  {tag}: {type(e).__name__}: {e}")
+            traceback.print_exc(limit=3)
+            failures.append(tag)
+
+    print(f"\n{len(results)} ok, {len(failures)} failed")
+    if failures:
+        for f in failures:
+            print("  FAILED:", f)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""RL orchestrator training launcher (the paper's experiment driver).
+
+    PYTHONPATH=src python -m repro.launch.rl_train --algo HL --users 5 \
+        --scenario A --constraint 89% [--ckpt results/hl_agent.msgpack]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.checkpoint.ckpt import save
+from repro.core.agent import HLAgent, HLHyperParams, ConvergenceTracker
+from repro.core.baselines import DQLAgent, QLAgent
+from repro.env.edge_cloud import (EdgeCloudEnv, EnvConfig,
+                                  brute_force_optimal, decision_string)
+from repro.env.scenarios import SCENARIOS, CONSTRAINTS
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--algo", choices=("HL", "DQL", "QL"), default="HL")
+    ap.add_argument("--users", type=int, default=5)
+    ap.add_argument("--scenario", choices="ABCD", default="A")
+    ap.add_argument("--constraint",
+                    choices=tuple(CONSTRAINTS), default="89%")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-steps", type=int, default=None)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    def env(seed):
+        return EdgeCloudEnv(EnvConfig(SCENARIOS[args.scenario],
+                                      CONSTRAINTS[args.constraint],
+                                      n_users=args.users, seed=seed))
+
+    opt = brute_force_optimal(SCENARIOS[args.scenario],
+                              CONSTRAINTS[args.constraint], args.users)
+    print(f"target optimum: ART={opt['art']:.1f} "
+          f"{decision_string(opt['actions'])}")
+    tracker = ConvergenceTracker(env(args.seed + 90), patience=4)
+    t0 = time.time()
+    if args.algo == "HL":
+        agent = HLAgent(env(args.seed), HLHyperParams(
+            seed=args.seed, epochs=400,
+            eps_decay_steps=1000 * args.users, k_best=4,
+            n_suggest=2 * args.users))
+        res = agent.train(tracker=tracker)
+        ckpt_obj = {"dqn": agent.dqn.params, "system": agent.sm.params}
+    elif args.algo == "DQL":
+        agent = DQLAgent(env(args.seed), HLHyperParams(
+            seed=args.seed, eps_decay_steps=6000 * args.users))
+        res = agent.train(tracker=tracker,
+                          max_steps=args.max_steps or 300_000,
+                          eval_every=200)
+        ckpt_obj = {"dqn": agent.dqn.params}
+    else:
+        agent = QLAgent(env(args.seed))
+        res = agent.train(tracker=tracker,
+                          max_steps=args.max_steps or 2_000_000,
+                          eval_every=2000)
+        ckpt_obj = None
+
+    print(f"\n{args.algo}: converged@{res.steps_to_converge} "
+          f"(total {res.real_steps} interactions, "
+          f"{time.time() - t0:.0f}s wall)")
+    print(f"final ART={res.final_art:.1f} "
+          f"decisions={decision_string(res.final_actions)}")
+    print(f"experience time {res.exp_time_ms / 60000:.1f} min (simulated), "
+          f"compute time {res.comp_time_s / 60:.2f} min")
+    if args.ckpt and ckpt_obj is not None:
+        save(args.ckpt, ckpt_obj)
+        print("saved →", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

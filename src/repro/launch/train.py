@@ -1,0 +1,89 @@
+"""LM training launcher: any assigned architecture on any mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+        --steps 50 --batch 8 --seq 64
+    # production mesh (requires real devices or host-device override):
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --mesh 2,2
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.ckpt import save
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.data.pipeline import batch_for_config
+from repro.sharding import policy
+from repro.sharding.runtime import set_mesh_info
+from repro.training.optimizer import adamw
+from repro.training.schedule import cosine_with_warmup
+from repro.training.train_step import make_train_step, init_train_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="yi-6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--mesh", default=None,
+                    help="data,model mesh shape, e.g. 4,2 (default: none)")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch))
+    print(f"training {cfg.name}: {cfg.num_params() / 1e6:.1f}M params")
+
+    opt = adamw(lr=cosine_with_warmup(args.lr, 20, args.steps))
+    mesh = None
+    if args.mesh:
+        d, m = map(int, args.mesh.split(","))
+        mesh = jax.make_mesh((d, m), ("data", "model"))
+        set_mesh_info(mesh)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step = make_train_step(cfg, opt, grad_accum=args.grad_accum)
+
+    if mesh is not None:
+        params_shape = jax.eval_shape(lambda s: s, state).params
+        pspecs = policy.param_specs(cfg, params_shape, mesh)
+        pshard = jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+        state = state._replace(
+            params=jax.device_put(state.params, pshard))
+        step = jax.jit(step)
+    else:
+        step = jax.jit(step)
+
+    t0 = time.time()
+    ctx = mesh if mesh is not None else _null()
+    with ctx:
+        for i in range(args.steps):
+            batch = batch_for_config(cfg, i, args.batch, args.seq)
+            state, metrics = step(state, batch)
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"step {i:4d} loss={float(metrics['loss']):.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.2f} "
+                      f"[{time.time() - t0:.0f}s]")
+    if args.ckpt:
+        save(args.ckpt, state)
+        print("saved →", args.ckpt)
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

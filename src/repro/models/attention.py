@@ -1,0 +1,261 @@
+"""Attention: GQA with RoPE, full or sliding-window, prefill and decode.
+
+Three execution paths:
+  * ``naive_attention``  — materializes the (S, S) score matrix. Oracle for
+    tests and for the Pallas kernel's ref.py.
+  * ``flash_attention_jnp`` — blockwise online-softmax with ``lax.scan`` over
+    query and key blocks. This is the default XLA path: it never materializes
+    S×S scores, so 32k-token prefill lowers with bounded live memory. On TPU
+    the Pallas kernel (repro.kernels.flash_attention) replaces it.
+  * ``decode_attention`` — one query token against a (ring-buffered) KV cache.
+
+Layouts: q (B, S, H, D), k/v (B, S, KV, D) with H = KV * G (GQA groups).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_fold(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """(B, S, H, D) → (B, KV, G, S, D)."""
+    b, s, h, d = q.shape
+    g = h // n_kv
+    return q.reshape(b, s, n_kv, g, d).transpose(0, 2, 3, 1, 4)
+
+
+def _gqa_unfold(o: jnp.ndarray) -> jnp.ndarray:
+    """(B, KV, G, S, D) → (B, S, H, D)."""
+    b, kv, g, s, d = o.shape
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, s, kv * g, d)
+
+
+# ---------------------------------------------------------------------------
+# Naive oracle
+# ---------------------------------------------------------------------------
+
+def naive_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None):
+    """Reference attention; materializes full scores. Test-scale only."""
+    b, sq, h, d = q.shape
+    _, sk, n_kv, _ = k.shape
+    scale = scale if scale is not None else d ** -0.5
+    qf = _gqa_fold(q, n_kv).astype(jnp.float32)  # (B, KV, G, Sq, Dk)
+    kf = k.transpose(0, 2, 1, 3).astype(jnp.float32)  # (B, KV, Sk, Dk)
+    vf = v.transpose(0, 2, 1, 3).astype(jnp.float32)  # (B, KV, Sk, Dv)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf) * scale
+    iq = jnp.arange(sq)[:, None] + (sk - sq)  # align ends (prefill continuation)
+    ik = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= ik <= iq
+    if window:
+        mask &= ik > iq - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", probs, vf)
+    return _gqa_unfold(out).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise flash (XLA / lax.scan) path
+# ---------------------------------------------------------------------------
+
+def _block_mask(qi, ki, q_block, k_block, q_off, causal, window):
+    # optimization_barrier stops XLA from precomputing (and stacking) the
+    # masks of every (q_block, k_block) grid step — observed as an S²-sized
+    # pred[] buffer without it.
+    qi, ki = jax.lax.optimization_barrier((qi, ki))
+    iq = qi * q_block + jnp.arange(q_block)[:, None] + q_off
+    ik = ki * k_block + jnp.arange(k_block)[None, :]
+    mask = jnp.ones((q_block, k_block), dtype=bool)
+    if causal:
+        mask &= ik <= iq
+    if window:
+        mask &= ik > iq - window
+    return mask
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_block, k_block, scale):
+    """Blockwise forward. Returns (o (B,KV,G,Sq,Dv), lse (B,KV,G,Sq))."""
+    b, sq, h, d = q.shape
+    _, sk, n_kv, _ = k.shape
+    dv = v.shape[-1]
+    g = h // n_kv
+    nq, nk = sq // q_block, sk // k_block
+    qf = _gqa_fold(q, n_kv)  # (B, KV, G, Sq, D)
+    kf = k.transpose(0, 2, 1, 3)
+    vf = v.transpose(0, 2, 1, 3)
+    qb = qf.reshape(b, n_kv, g, nq, q_block, d).transpose(3, 0, 1, 2, 4, 5)
+    kb = kf.reshape(b, n_kv, nk, k_block, d).transpose(2, 0, 1, 3, 4)
+    vb = vf.reshape(b, n_kv, nk, k_block, dv).transpose(2, 0, 1, 3, 4)
+    q_off = sk - sq
+
+    def q_body(qi, qblk):
+        # qi flows through the scan carry: a loop-carried counter prevents
+        # XLA from precomputing (and stacking!) all nq*nk block masks.
+        qblk = qblk.astype(jnp.float32) * scale
+
+        def k_body(carry, kv):
+            m, l, acc, ki = carry
+            kblk, vblk = kv
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qblk,
+                           kblk.astype(jnp.float32))
+            mask = _block_mask(qi, ki, q_block, k_block, q_off, causal,
+                               window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new, ki + 1), None
+
+        m0 = jnp.full((b, n_kv, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, n_kv, g, q_block, dv), jnp.float32)
+        (m, l, acc, _), _ = jax.lax.scan(
+            k_body, (m0, l0, a0, jnp.zeros((), jnp.int32)), (kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return qi + 1, (out, lse)
+
+    _, (ob, lseb) = jax.lax.scan(q_body, jnp.zeros((), jnp.int32), qb)
+    o = ob.transpose(1, 2, 3, 0, 4, 5).reshape(b, n_kv, g, sq, dv)
+    lse = lseb.transpose(1, 2, 3, 0, 4).reshape(b, n_kv, g, sq)
+    return o, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, q_block, k_block, scale):
+    o, _ = _flash_fwd_impl(q, k, v, causal, window, q_block, k_block, scale)
+    return _gqa_unfold(o).astype(q.dtype)
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, q_block, k_block, scale):
+    o, lse = _flash_fwd_impl(q, k, v, causal, window, q_block, k_block,
+                             scale)
+    out = _gqa_unfold(o).astype(q.dtype)
+    return out, (q, k, v, o, lse)
+
+
+def _flash_vjp_bwd(causal, window, q_block, k_block, scale, res, do):
+    """Blockwise flash backward (recompute p per block pair, O(S) memory).
+
+    dq_i = Σ_j ds_ij k_j;  dk_j = Σ_i ds_ijᵀ q_i;  dv_j = Σ_i p_ijᵀ do_i
+    where ds = p ⊙ (do·vᵀ − δ_i) · scale,  δ_i = rowsum(do_i ⊙ o_i).
+    """
+    q, k, v, o, lse = res
+    b, sq, h, d = q.shape
+    _, sk, n_kv, _ = k.shape
+    dv_dim = v.shape[-1]
+    g = h // n_kv
+    nq, nk = sq // q_block, sk // k_block
+    q_off = sk - sq
+
+    qf = _gqa_fold(q, n_kv).astype(jnp.float32)  # (B,KV,G,Sq,D)
+    dof = _gqa_fold(do, n_kv).astype(jnp.float32)  # (B,KV,G,Sq,Dv)
+    kf = k.transpose(0, 2, 1, 3).astype(jnp.float32)  # (B,KV,Sk,D)
+    vf = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    delta = jnp.sum(dof * o, axis=-1)  # (B,KV,G,Sq)
+
+    qb = qf.reshape(b, n_kv, g, nq, q_block, d).transpose(3, 0, 1, 2, 4, 5)
+    dob = dof.reshape(b, n_kv, g, nq, q_block, dv_dim).transpose(
+        3, 0, 1, 2, 4, 5)
+    lseb = lse.reshape(b, n_kv, g, nq, q_block).transpose(3, 0, 1, 2, 4)
+    deltab = delta.reshape(b, n_kv, g, nq, q_block).transpose(3, 0, 1, 2, 4)
+    kb = kf.reshape(b, n_kv, nk, k_block, d).transpose(2, 0, 1, 3, 4)
+    vb = vf.reshape(b, n_kv, nk, k_block, dv_dim).transpose(2, 0, 1, 3, 4)
+
+    def q_body(carry, qi_stuff):
+        dk_acc, dv_acc, qi = carry  # (B,KV,Sk,D), (B,KV,Sk,Dv), counter
+        qblk, doblk, lseblk, dltblk = qi_stuff
+
+        def k_body(inner, kv):
+            dq_blk, ki = inner
+            kblk, vblk = kv
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qblk, kblk) * scale
+            mask = _block_mask(qi, ki, q_block, k_block, q_off, causal,
+                               window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lseblk[..., None])  # (B,KV,G,qb,kb)
+            dp = jnp.einsum("bkgqe,bkse->bkgqs", doblk, vblk)
+            ds = p * (dp - dltblk[..., None]) * scale
+            dq_blk = dq_blk + jnp.einsum("bkgqs,bksd->bkgqd", ds, kblk)
+            dk_b = jnp.einsum("bkgqs,bkgqd->bksd", ds, qblk)
+            dv_b = jnp.einsum("bkgqs,bkgqe->bkse", p, doblk)
+            return (dq_blk, ki + 1), (dk_b, dv_b)
+
+        dq0 = jnp.zeros((b, n_kv, g, q_block, d), jnp.float32)
+        (dq_blk, _), (dk_js, dv_js) = jax.lax.scan(
+            k_body, (dq0, jnp.zeros((), jnp.int32)), (kb, vb))
+        # dk_js: (nk, B, KV, kb, D) → scatter-add into the running total
+        dk_acc = dk_acc + dk_js.transpose(1, 2, 0, 3, 4).reshape(
+            b, n_kv, sk, d)
+        dv_acc = dv_acc + dv_js.transpose(1, 2, 0, 3, 4).reshape(
+            b, n_kv, sk, dv_dim)
+        return (dk_acc, dv_acc, qi + 1), dq_blk
+
+    dk0 = jnp.zeros((b, n_kv, sk, d), jnp.float32)
+    dv0 = jnp.zeros((b, n_kv, sk, dv_dim), jnp.float32)
+    (dk_acc, dv_acc, _), dq_blks = jax.lax.scan(
+        q_body, (dk0, dv0, jnp.zeros((), jnp.int32)),
+        (qb, dob, lseb, deltab))
+    dq = dq_blks.transpose(1, 2, 3, 0, 4, 5).reshape(b, n_kv, g, sq, d)
+    dq = _gqa_unfold(dq).astype(q.dtype)
+    dk = dk_acc.transpose(0, 2, 1, 3).astype(k.dtype)
+    dv = dv_acc.transpose(0, 2, 1, 3).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_block", "k_block", "scale"))
+def flash_attention_jnp(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_block: int = 512, k_block: int = 512,
+                        scale: float | None = None):
+    """Online-softmax attention with a flash-style custom VJP.
+
+    O(S) live memory in both forward AND backward (the backward recomputes
+    p per block pair instead of saving O(S²) intermediates — this is what
+    keeps 4k/32k training inside HBM). Supports dk != dv (MLA) and GQA.
+    """
+    b, sq, h, d = q.shape
+    _, sk, n_kv, _ = k.shape
+    scale = scale if scale is not None else d ** -0.5
+    q_block = min(q_block, sq)
+    k_block = min(k_block, sk)
+    assert sq % q_block == 0 and sk % k_block == 0, (sq, q_block, sk, k_block)
+    return _flash(q, k, v, causal, window, q_block, k_block, scale)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, valid_mask, *, scale=None):
+    """q: (B, 1, H, D); k/v_cache: (B, S, KV, D); valid_mask: (B, S) bool.
+
+    Ring-buffered caches pass the validity mask of filled slots; positional
+    information lives in the (pre-RoPEd) cached keys, so slot order is
+    irrelevant to the math.
+    """
+    b, _, h, d = q.shape
+    _, s, n_kv, _ = k_cache.shape
+    scale = scale if scale is not None else d ** -0.5
+    qf = _gqa_fold(q, n_kv)[..., 0, :].astype(jnp.float32)  # (B, KV, G, D)
+    kf = k_cache.transpose(0, 2, 1, 3).astype(jnp.float32)  # (B, KV, S, D)
+    vf = v_cache.transpose(0, 2, 1, 3).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qf, kf) * scale
+    scores = jnp.where(valid_mask[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", probs, vf)  # (B, KV, G, D)
+    return out.reshape(b, 1, h, d).astype(q.dtype)

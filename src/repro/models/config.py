@@ -1,0 +1,263 @@
+"""Unified model configuration for the assigned architecture zoo.
+
+A single ``ModelConfig`` describes every architecture family we support:
+dense GQA transformers (llama-style, squared-ReLU, SWA), MoE (Mixtral,
+DeepSeek-V2 with MLA), SSM (RWKV6), hybrid (Zamba2: Mamba2 + shared attention
+block), VLM backbones (M-RoPE) and audio decoders (multi-codebook).
+
+The model forward (``models/transformer.py``) is driven entirely by this
+config; the per-architecture files in ``repro/configs/`` only *instantiate*
+it with published hyper-parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts settings (Mixtral / DeepSeek-V2 style)."""
+
+    num_experts: int = 8
+    num_experts_per_tok: int = 2
+    # d_ff of each routed expert (may differ from the dense d_ff).
+    expert_d_ff: int = 14336
+    # DeepSeek-style always-on shared experts (0 for Mixtral).
+    num_shared_experts: int = 0
+    shared_d_ff: int = 0
+    # First k layers use a dense MLP instead of MoE (DeepSeek-V2: 1).
+    first_k_dense: int = 0
+    # Router settings.
+    router_aux_loss_coef: float = 0.01
+    # Capacity factor for the sort/scatter token-dropping dispatch.
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 Multi-head Latent Attention."""
+
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    """Mamba2 SSD settings (used by the zamba2 hybrid)."""
+
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk_size: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    """RWKV-v6 (Finch) settings."""
+
+    head_dim: int = 64
+    # low-rank sizes for the data-dependent token-shift and decay.
+    token_shift_rank: int = 32
+    decay_rank: int = 64
+    chunk_size: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config to rule the whole zoo."""
+
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0  # 0 → d_model // n_heads
+    d_ff: int = 1024
+    vocab_size: int = 32000
+    # Block kind per layer position is derived from family +
+    # the knobs below; see block_kinds().
+    mlp_kind: str = "swiglu"  # swiglu | squared_relu
+    norm_eps: float = 1e-5
+    rope_theta: float = 10000.0
+    # M-RoPE (qwen2-vl): half-dim section sizes (t, h, w); () → standard RoPE.
+    mrope_sections: Tuple[int, ...] = ()
+    # Sliding-window attention width; 0 → full attention.
+    sliding_window: int = 0
+    # Attention-free / hybrid sub-configs (None for pure transformers).
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    mamba2: Optional[Mamba2Config] = None
+    rwkv6: Optional[RWKV6Config] = None
+    # Zamba2: apply a single weight-shared attention block every k mamba
+    # layers (0 → never).
+    shared_attn_every: int = 0
+    # MusicGen: number of EnCodec codebooks (0 → plain token LM).
+    num_codebooks: int = 0
+    # VLM: number of prefix positions fed from the (stubbed) vision
+    # frontend as precomputed patch embeddings (0 → text-only).
+    num_patch_positions: int = 0
+    # Tie input embedding and LM head.
+    tie_embeddings: bool = False
+    # dtypes
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    # Whether the arch is sub-quadratic in context (controls long_500k).
+    subquadratic: bool = False
+    # Use the Pallas kernels for attention / wkv (tests + TPU);
+    # False = pure-jnp reference path (used for dry-run lowering).
+    use_pallas: bool = False
+    # Sequence-parallel residual sharding (Megatron SP): PartitionSpec
+    # entries for the (batch, seq, d_model) residual stream, applied with
+    # with_sharding_constraint at every block boundary. None → no
+    # constraint (single-device tests). Example: (("pod","data"), "model",
+    # None). Shards the remat-saved scan carries 16-ways over the model
+    # axis — the difference between 50 GiB and 4 GiB per device for
+    # train_4k (EXPERIMENTS.md §Perf iteration 1).
+    residual_spec: tuple | None = None
+    # MoE dispatch-buffer sharding constraints: specs for the
+    # (G, E, C, D) scatter buffer and the (G, E, C, F) expert hidden.
+    # Set by the launcher; None for single-device runs. Without these
+    # GSPMD replicates the dispatch buffer (observed: 40 GiB/device for
+    # mixtral train_4k).
+    moe_buf_spec: tuple | None = None
+    moe_hidden_spec: tuple | None = None
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def attn_out_dim(self) -> int:
+        return self.n_heads * self.resolved_head_dim
+
+    @property
+    def param_jdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def compute_jdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def block_kinds(self) -> Tuple[str, ...]:
+        """Per-layer block kind.
+
+        Kinds: "attn" (attention + dense MLP), "moe" (attention + MoE),
+        "mla_moe"/"mla_dense" (MLA attention), "mamba2", "rwkv6".
+        The zamba2 shared attention block is NOT in this list — it is a
+        single extra weight-shared block applied every
+        ``shared_attn_every`` mamba layers.
+        """
+        if self.rwkv6 is not None:
+            return ("rwkv6",) * self.n_layers
+        if self.mamba2 is not None:
+            return ("mamba2",) * self.n_layers
+        if self.mla is not None:
+            assert self.moe is not None, "MLA arch here implies DeepSeek MoE"
+            kinds = []
+            for i in range(self.n_layers):
+                kinds.append("mla_dense" if i < self.moe.first_k_dense else "mla_moe")
+            return tuple(kinds)
+        if self.moe is not None:
+            kinds = []
+            for i in range(self.n_layers):
+                kinds.append("attn" if i < self.moe.first_k_dense else "moe")
+            return tuple(kinds)
+        return ("attn",) * self.n_layers
+
+    def num_params(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS)."""
+        d, v = self.d_model, self.vocab_size
+        hd = self.resolved_head_dim
+        total = 0
+        # embeddings (+ per-codebook for musicgen)
+        n_embed_tables = max(1, self.num_codebooks)
+        total += n_embed_tables * v * d
+        if not self.tie_embeddings:
+            total += max(1, self.num_codebooks) * d * v
+        for kind in self.block_kinds():
+            if kind in ("attn", "moe"):
+                # attention
+                total += d * self.n_heads * hd  # q
+                total += 2 * d * self.n_kv_heads * hd  # k, v
+                total += self.n_heads * hd * d  # o
+                total += 2 * d  # norms
+            if kind.startswith("mla"):
+                m = self.mla
+                total += d * m.q_lora_rank + m.q_lora_rank * self.n_heads * (
+                    m.qk_nope_head_dim + m.qk_rope_head_dim
+                )
+                total += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                total += m.kv_lora_rank * self.n_heads * (
+                    m.qk_nope_head_dim + m.v_head_dim
+                )
+                total += self.n_heads * m.v_head_dim * d
+                total += 2 * d + m.q_lora_rank + m.kv_lora_rank  # norms
+            if kind in ("attn", "mla_dense"):
+                if self.mlp_kind == "swiglu":
+                    total += 3 * d * self.d_ff
+                else:
+                    total += 2 * d * self.d_ff
+            elif kind in ("moe", "mla_moe"):
+                e = self.moe
+                total += d * e.num_experts  # router
+                total += e.num_experts * 3 * d * e.expert_d_ff
+                if e.num_shared_experts:
+                    total += 3 * d * e.shared_d_ff
+            elif kind == "mamba2":
+                mc = self.mamba2
+                di = mc.d_inner(d)
+                nh = mc.n_heads(d)
+                conv_dim = di + 2 * mc.n_groups * mc.d_state
+                total += d * (2 * di + 2 * mc.n_groups * mc.d_state + nh)
+                total += mc.d_conv * conv_dim + conv_dim
+                total += 3 * nh  # A_log, D, dt_bias
+                total += di  # gated norm
+                total += di * d  # out_proj
+                total += d  # pre-norm
+            elif kind == "rwkv6":
+                r = self.rwkv6
+                # time-mix: 5 projections + loras + mixing params
+                total += 4 * d * d + d * d  # r,k,v,g,o
+                total += d * 5 * r.token_shift_rank + 5 * r.token_shift_rank * d
+                total += d * r.decay_rank + r.decay_rank * d
+                total += 6 * d  # mu params + decay base
+                total += 2 * d  # ln_x
+                # channel-mix
+                total += d * self.d_ff + self.d_ff * d + d * d
+                total += 2 * d  # mus
+                total += 4 * d  # the two layer norms
+        if self.shared_attn_every:
+            # one shared attention + MLP block (zamba2)
+            total += d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+            total += self.n_heads * hd * d
+            total += 3 * d * self.d_ff
+            total += 2 * d
+        total += d  # final norm
+        return total
+
+    def active_params(self) -> int:
+        """Active (per-token) parameter count — MoE counts only routed top-k."""
+        if self.moe is None:
+            return self.num_params()
+        e = self.moe
+        inactive_per_moe_layer = (
+            (e.num_experts - e.num_experts_per_tok) * 3 * self.d_model * e.expert_d_ff
+        )
+        n_moe_layers = sum(1 for k in self.block_kinds() if k in ("moe", "mla_moe"))
+        return self.num_params() - n_moe_layers * inactive_per_moe_layer

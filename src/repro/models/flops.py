@@ -1,0 +1,68 @@
+"""Analytic MODEL_FLOPS per (architecture × input shape).
+
+Used by the roofline analysis (§Roofline): MODEL_FLOPS = 6·N·D for training
+(2 fwd + 4 bwd per active param per token) or 2·N_active per decoded token,
+plus the attention term (which parameter counting misses). The ratio
+MODEL_FLOPS / HLO_FLOPs measures how much compiled compute is "useful"
+(remat recompute, MoE capacity padding and dispatch overhead show up here).
+"""
+from __future__ import annotations
+
+from repro.configs.shapes import SHAPES
+from repro.models.config import ModelConfig
+
+
+def attention_flops_token(cfg: ModelConfig, kv_len: int) -> float:
+    """Per-token attention flops against ``kv_len`` keys (fwd only)."""
+    if cfg.rwkv6 is not None:
+        n = cfg.rwkv6.head_dim
+        h = cfg.d_model // n
+        # wkv state update + readout: ~4 · H · N² per token
+        return 4.0 * h * n * n
+    if cfg.mamba2 is not None:
+        mc = cfg.mamba2
+        di = mc.d_inner(cfg.d_model)
+        # SSD state update/readout: ~6 · d_inner · d_state per token
+        base = 6.0 * di * mc.d_state
+        if cfg.shared_attn_every:  # zamba2's shared attention block
+            w = min(kv_len, cfg.sliding_window or kv_len)
+            napp = cfg.n_layers // cfg.shared_attn_every
+            base += (4.0 * cfg.n_heads * cfg.resolved_head_dim * w
+                     * napp / cfg.n_layers)
+        return base
+    if cfg.mla is not None:
+        m = cfg.mla
+        # absorbed decode form: q_lat·ckv + out_lat reads, per head
+        return 4.0 * cfg.n_heads * (m.kv_lora_rank + m.qk_rope_head_dim) * 1.0 * min(
+            kv_len, kv_len)
+    w = cfg.sliding_window or 0
+    eff = min(kv_len, w) if w else kv_len
+    return 4.0 * cfg.n_heads * cfg.resolved_head_dim * eff
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """Global MODEL_FLOPS for one step of the given input shape."""
+    sh = SHAPES[shape_name]
+    n_active = cfg.active_params()
+    if sh.mode == "train":
+        tokens = sh.global_batch * sh.seq_len
+        flops = 6.0 * n_active * tokens
+        # attention: per token attends ~S/2 (causal) or window
+        w = cfg.sliding_window or 0
+        avg_kv = min(sh.seq_len / 2, w) if w else sh.seq_len / 2
+        per_layer = [attention_flops_token(cfg, int(avg_kv))
+                     for _ in range(cfg.n_layers)]
+        flops += 3.0 * tokens * sum(per_layer)  # fwd + 2x bwd
+        return flops
+    if sh.mode == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        w = cfg.sliding_window or 0
+        avg_kv = min(sh.seq_len / 2, w) if w else sh.seq_len / 2
+        flops = 2.0 * n_active * tokens
+        flops += tokens * cfg.n_layers * attention_flops_token(cfg, int(avg_kv))
+        return flops
+    # decode: one token per sequence against a seq_len cache
+    flops = 2.0 * n_active * sh.global_batch
+    flops += (sh.global_batch * cfg.n_layers
+              * attention_flops_token(cfg, sh.seq_len))
+    return flops

@@ -1,0 +1,151 @@
+"""Core neural-net primitives in pure JAX (no flax).
+
+Conventions used across the model zoo:
+  * params are nested dicts of jnp arrays (pytrees),
+  * every module is a pair of functions ``init_*(key, cfg) -> params`` and
+    ``apply_*(params, x, ...) -> y``,
+  * compute happens in ``cfg.compute_dtype``; params are stored in
+    ``cfg.param_dtype``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (the llama/mistral default)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    if scale is None:
+        scale = fan_in ** -0.5
+    return (scale * jax.random.truncated_normal(key, -3.0, 3.0, shape)).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (0.02 * jax.random.truncated_normal(key, -3.0, 3.0, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(orig_dtype)
+
+
+def init_gated_rmsnorm(dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def gated_rmsnorm(params: dict, x: jnp.ndarray, gate: jnp.ndarray,
+                  eps: float = 1e-5) -> jnp.ndarray:
+    """Mamba2's norm: RMSNorm(x * silu(gate)) — applied before out_proj."""
+    x = x * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    return rmsnorm(params, x, eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,). float32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float):
+    """cos/sin tables for standard RoPE.
+
+    positions: (..., S) int32 → cos, sin: (..., S, head_dim//2) float32.
+    """
+    inv = rope_freqs(head_dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float,
+                  sections: tuple[int, ...]):
+    """Multimodal RoPE (Qwen2-VL §2.1): positions (3, ..., S) for (t, h, w).
+
+    ``sections`` are half-dim section sizes summing to head_dim // 2. The
+    frequency axis is partitioned into the sections; section i takes its
+    rotation angle from positions[i].
+    """
+    assert positions.shape[0] == len(sections)
+    assert sum(sections) == head_dim // 2
+    inv = rope_freqs(head_dim, theta)  # (half,)
+    # (3, ..., S, half)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang[i, ..., start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs (x[..2i], x[..2i+1]) — "interleaved-half" llama layout.
+
+    x: (B, S, H, D); cos/sin: (B, S, Dh) or (S, Dh) with Dh = D // 2.
+    Uses the split-half convention (rotate_half), matching llama/mistral.
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, Dh) → broadcast over batch
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (B, S, Dh)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1f, x2f = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    elif kind in ("squared_relu", "gelu"):
+        return {
+            "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_down": dense_init(ks[1], (d_ff, d_model), dtype),
+        }
+    raise ValueError(f"unknown mlp kind {kind!r}")
+
+
+def apply_mlp(params: dict, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+        return h @ params["w_down"]
+    elif kind == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ params["w_up"]))
+        return h @ params["w_down"]
+    elif kind == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"])
+        return h @ params["w_down"]
+    raise ValueError(f"unknown mlp kind {kind!r}")

@@ -1,0 +1,203 @@
+"""Mamba2 (SSD) block — chunked matmul form for train/prefill, recurrent decode.
+
+TPU adaptation (DESIGN.md §3): the CUDA selective-scan kernel is replaced by
+the chunked State-Space-Dual formulation (Dao & Gu 2024, §6): within each
+chunk the output is a masked quadratic form (matmuls → MXU), and a short
+``lax.scan`` carries the (H, P, N) state across chunks. Chunk size is a
+config knob (default 256) chosen so intra-chunk tiles are 128-aligned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import Mamba2Config
+from repro.models.layers import dense_init, init_gated_rmsnorm, gated_rmsnorm
+
+
+def init_mamba2(key, d_model: int, mc: Mamba2Config, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    d_in = mc.d_inner(d_model)
+    nh = mc.n_heads(d_model)
+    conv_dim = d_in + 2 * mc.n_groups * mc.d_state
+    proj_out = 2 * d_in + 2 * mc.n_groups * mc.d_state + nh
+    return {
+        "in_proj": dense_init(ks[0], (d_model, proj_out), dtype),
+        "conv_w": dense_init(ks[1], (mc.d_conv, conv_dim), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        # S4D-style A init: A in [-1, -nh] roughly; store log(-A)
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": init_gated_rmsnorm(d_in, dtype),
+        "out_proj": dense_init(ks[2], (d_in, d_model), dtype),
+    }
+
+
+def _split_proj(zxbcdt, d_in: int, mc: Mamba2Config):
+    gn = mc.n_groups * mc.d_state
+    z = zxbcdt[..., :d_in]
+    xs = zxbcdt[..., d_in:2 * d_in]
+    bb = zxbcdt[..., 2 * d_in:2 * d_in + gn]
+    cc = zxbcdt[..., 2 * d_in + gn:2 * d_in + 2 * gn]
+    dt = zxbcdt[..., 2 * d_in + 2 * gn:]
+    return z, xs, bb, cc, dt
+
+
+def _causal_conv(x, w, b):
+    """x: (B, S, C); w: (K, C) depthwise causal conv; b: (C,)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _segsum(t):
+    """t: (..., Q) → (..., Q, Q) lower-triangular pairwise sums.
+
+    out[.., i, j] = sum_{j < k <= i} t[.., k]  (i >= j), -inf above diag.
+    """
+    q = t.shape[-1]
+    cs = jnp.cumsum(t, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(xs, dt, A, B, C, mc: Mamba2Config, init_state=None):
+    """Chunked SSD scan.
+
+    xs: (B, S, H, P); dt: (B, S, H) (post-softplus); A: (H,) negative;
+    B, C: (B, S, G, N). Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    b, s, h, p = xs.shape
+    g, n = B.shape[2], B.shape[3]
+    q = min(mc.chunk_size, s)
+    if s % q:  # end-pad to a chunk multiple: x=0, dt=0 is exact
+        pad = q - s % q
+        p4 = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        y, fin = ssd_chunked(p4(xs), p4(dt), A, p4(B), p4(C), mc, init_state)
+        return y[:, :s], fin
+    nc = s // q
+    hg = h // g  # heads per group
+
+    # reshape into chunks; broadcast groups → heads
+    xs_c = xs.reshape(b, nc, q, h, p)
+    dt_c = dt.reshape(b, nc, q, h)
+    B_c = B.reshape(b, nc, q, g, n)
+    C_c = C.reshape(b, nc, q, g, n)
+    dA = dt_c * A  # (b, nc, q, h) — negative
+
+    # --- intra-chunk (diagonal blocks): masked quadratic form ---
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # (b, nc, h, q, q)
+    # scores: C_i · B_j per (group) then weighted by L and dt_j
+    cb = jnp.einsum("bcqgn,bcsgn->bcgqs", C_c, B_c)  # (b,nc,g,q,s=q)
+    cb = jnp.repeat(cb, hg, axis=2)  # (b, nc, h, q, q)
+    scores = cb * L * dt_c.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_diag = jnp.einsum("bchqs,bcshp->bcqhp", scores, xs_c)
+
+    # --- chunk states: decay-weighted sum of outer products ---
+    dA_cum = jnp.cumsum(dA, axis=2)  # (b, nc, q, h)
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b,nc,q,h)
+    xw = xs_c * (dt_c * decay_to_end)[..., None]  # weight each token
+    B_h = jnp.repeat(B_c, hg, axis=3)  # (b, nc, q, h, n)
+    states = jnp.einsum("bcqhp,bcqhn->bchpn", xw, B_h)
+
+    # --- inter-chunk recurrence (short scan over nc chunks) ---
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])  # (b, nc, h)
+
+    def body(carry, inp):
+        st_c, dec = inp  # (b,h,p,n), (b,h)
+        prev = carry
+        new = prev * dec[..., None, None] + st_c
+        return new, prev  # emit state at chunk START
+
+    init = (jnp.zeros((b, h, p, n), xs.dtype) if init_state is None
+            else init_state.astype(xs.dtype))
+    final_state, prev_states = jax.lax.scan(
+        body, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b, nc, h, p, n)
+
+    # --- contribution of the carried-in state to each position ---
+    decay_from_start = jnp.exp(dA_cum)  # (b, nc, q, h)
+    C_h = jnp.repeat(C_c, hg, axis=3)  # (b, nc, q, h, n)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       C_h, prev_states, decay_from_start)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def mamba2_forward(params, x, mc: Mamba2Config, eps: float,
+                   init_state=None):
+    """Full mamba2 mixer. x: (B, S, D) → (y, (conv_tail, ssm_state))."""
+    b, s, d = x.shape
+    d_in = mc.d_inner(d)
+    nh = mc.n_heads(d)
+    zxbcdt = x @ params["in_proj"]
+    z, xs, bb, cc, dt = _split_proj(zxbcdt, d_in, mc)
+    xbc = jnp.concatenate([xs, bb, cc], axis=-1)
+    if init_state is not None:
+        conv_tail_in = init_state[0]  # (B, d_conv-1, conv_dim)
+        xbc_ext = jnp.concatenate([conv_tail_in, xbc], axis=1)
+        conv = _causal_conv(xbc_ext, params["conv_w"], params["conv_b"])
+        conv = conv[:, -s:]
+    else:
+        conv = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    conv = jax.nn.silu(conv)
+    xs_c = conv[..., :d_in].reshape(b, s, nh, mc.head_dim)
+    gn = mc.n_groups * mc.d_state
+    B_ = conv[..., d_in:d_in + gn].reshape(b, s, mc.n_groups, mc.d_state)
+    C_ = conv[..., d_in + gn:].reshape(b, s, mc.n_groups, mc.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])  # (H,) negative
+    y, ssm_state = ssd_chunked(
+        xs_c, dt.astype(xs_c.dtype), A.astype(xs_c.dtype), B_, C_, mc,
+        init_state=None if init_state is None else init_state[1])
+    y = y + xs_c * params["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    y = gated_rmsnorm(params["norm"], y, z, eps)
+    out = y @ params["out_proj"]
+    conv_tail = jnp.concatenate(
+        [jnp.zeros((b, mc.d_conv - 1, xbc.shape[-1]), xbc.dtype), xbc],
+        axis=1)[:, -(mc.d_conv - 1):]
+    return out, (conv_tail, ssm_state)
+
+
+def mamba2_decode(params, x, state, mc: Mamba2Config, eps: float):
+    """Single-token recurrent step.
+
+    x: (B, 1, D); state = (conv_tail (B, d_conv-1, conv_dim),
+    ssm_state (B, H, P, N)). Returns (y (B,1,D), new_state).
+    """
+    b, _, d = x.shape
+    d_in = mc.d_inner(d)
+    nh = mc.n_heads(d)
+    conv_tail, ssm_state = state
+    zxbcdt = x[:, 0] @ params["in_proj"]  # (B, proj)
+    z, xs, bb, cc, dt = _split_proj(zxbcdt, d_in, mc)
+    xbc = jnp.concatenate([xs, bb, cc], axis=-1)  # (B, conv_dim)
+    window = jnp.concatenate([conv_tail, xbc[:, None]], axis=1)  # (B,K,C)
+    conv = jnp.einsum("bkc,kc->bc", window, params["conv_w"]) + params["conv_b"]
+    conv = jax.nn.silu(conv)
+    xs_t = conv[:, :d_in].reshape(b, nh, mc.head_dim)
+    gn = mc.n_groups * mc.d_state
+    B_ = conv[:, d_in:d_in + gn].reshape(b, mc.n_groups, mc.d_state)
+    C_ = conv[:, d_in + gn:].reshape(b, mc.n_groups, mc.d_state)
+    hg = nh // mc.n_groups
+    B_h = jnp.repeat(B_, hg, axis=1)  # (B, H, N)
+    C_h = jnp.repeat(C_, hg, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A).astype(xs_t.dtype)  # (B, H)
+    upd = jnp.einsum("bhp,bhn->bhpn", xs_t * dt.astype(xs_t.dtype)[..., None],
+                     B_h)
+    new_ssm = ssm_state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, C_h)
+    y = y + xs_t * params["D"].astype(y.dtype)[None, :, None]
+    y = y.reshape(b, d_in)
+    y = gated_rmsnorm(params["norm"], y, z, eps)
+    out = (y @ params["out_proj"])[:, None]
+    new_tail = window[:, 1:]
+    return out, (new_tail, new_ssm)

@@ -1,0 +1,230 @@
+"""RWKV-v6 (Finch) — data-dependent decay linear attention.
+
+Forms:
+  * ``wkv6_recurrent`` — exact per-step recurrence. Oracle for tests and the
+    decode path (O(1) state: one (N, N) matrix per head).
+  * ``wkv6_chunked``   — chunked parallel form for train/prefill. Within a
+    chunk the pairwise decay products are evaluated with *tile-referenced*
+    exponents so every ``exp`` argument is ≤ 0 (no overflow for any decay —
+    see the derivation in DESIGN.md §3 / kernels/rwkv6 notes); across chunks
+    a ``lax.scan`` carries the state. All heavy math is matmul-shaped (MXU).
+
+Recurrence per head (state S ∈ R^{N×N}, N = head_dim):
+    o_t[j] = Σ_i r_t[i] (S_{t-1}[i,j] + u[i] k_t[i] v_t[j])
+    S_t    = diag(w_t) S_{t-1} + k_t v_t^T,    w_t = exp(lw_t), lw_t ≤ 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import RWKV6Config
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# WKV core
+# ---------------------------------------------------------------------------
+
+def wkv6_recurrent(r, k, v, lw, u, init_state=None):
+    """Exact scan. r,k,v,lw: (B, S, H, N); u: (H, N).
+
+    Returns (o (B,S,H,N), final_state (B,H,N,N)).
+    """
+    b, s, h, n = r.shape
+    s0 = (jnp.zeros((b, h, n, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        rt, kt, vt, lwt = inp  # (B, H, N) each
+        bonus = u[None] * kt  # (B, H, N)
+        # o[j] = Σ_i r[i] (S[i,j] + bonus[i] v[j])
+        o = jnp.einsum("bhi,bhij->bhj", rt, state) + jnp.einsum(
+            "bhi,bhi,bhj->bhj", rt, bonus, vt)
+        new = state * jnp.exp(lwt)[..., None] + jnp.einsum(
+            "bhi,bhj->bhij", kt, vt)
+        return new, o
+
+    xs = tuple(a.astype(jnp.float32).transpose(1, 0, 2, 3)
+               for a in (r, k, v, lw))
+    final, o = jax.lax.scan(step, s0, xs)
+    return o.transpose(1, 0, 2, 3).astype(r.dtype), final
+
+
+def wkv6_chunked(r, k, v, lw, u, init_state=None, *, chunk: int = 64,
+                 tile: int = 32):
+    """Chunked parallel WKV. Same signature/semantics as wkv6_recurrent."""
+    b, s, h, n = r.shape
+    q = min(chunk, s)
+    if s % q:  # end-pad to a chunk multiple: k=v=r=0, lw=0 is exact
+        pad = q - s % q
+        pz = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        o, fin = wkv6_chunked(pz(r), pz(k), pz(v), pz(lw), u, init_state,
+                              chunk=chunk, tile=tile)
+        return o[:, :s], fin
+    nc = s // q
+    tau = min(tile, q)
+    assert q % tau == 0
+    f32 = jnp.float32
+
+    rc = r.astype(f32).reshape(b, nc, q, h, n)
+    kc = k.astype(f32).reshape(b, nc, q, h, n)
+    vc = v.astype(f32).reshape(b, nc, q, h, n)
+    lwc = lw.astype(f32).reshape(b, nc, q, h, n)
+    cw = jnp.cumsum(lwc, axis=2)           # inclusive within chunk
+    ecw = cw - lwc                          # exclusive
+
+    s0 = (jnp.zeros((b, h, n, n), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def chunk_body(state, inp):
+        rq, kq, vq, cwq, ecwq = inp  # (b, q, h, n) each
+        # cross-chunk: o_t += (r_t ⊙ exp(ecw_t)) @ S_prev
+        rdec = rq * jnp.exp(ecwq)
+        y = jnp.einsum("bqhi,bhij->bqhj", rdec, state)
+
+        # intra-chunk, tile by tile (static python loop — q/tau tiles)
+        for ti in range(q // tau):
+            t0 = ti * tau
+            ref = ecwq[:, t0]  # (b, h, n) — tile-start reference
+            # off-diagonal: keys strictly before t0
+            if t0 > 0:
+                q_t = rq[:, t0:t0 + tau] * jnp.exp(
+                    ecwq[:, t0:t0 + tau] - ref[:, None])  # ≤0 exponent
+                k_s = kq[:, :t0] * jnp.exp(ref[:, None] - cwq[:, :t0])  # ≤0
+                a_off = jnp.einsum("bthn,bshn->bhts", q_t, k_s)
+                y = y.at[:, t0:t0 + tau].add(
+                    jnp.einsum("bhts,bshj->bthj", a_off, vq[:, :t0]))
+            # diagonal tile: explicit (tau, tau) decay, all exponents ≤ 0
+            rt = rq[:, t0:t0 + tau]  # (b, tau, h, n)
+            kt = kq[:, t0:t0 + tau]
+            vt = vq[:, t0:t0 + tau]
+            # dec[t, s] = ecw[t0+t] - cw[t0+s]; ≤ 0 wherever s < t
+            dec = (ecwq[:, t0:t0 + tau][:, :, None]
+                   - cwq[:, t0:t0 + tau][:, None, :])  # (b, t, s, h, n)
+            strictly_lower = jnp.tril(jnp.ones((tau, tau), bool), k=-1)
+            dec = jnp.where(strictly_lower[None, :, :, None, None], dec, 0.0)
+            a_diag = jnp.einsum("bthn,btshn->bhts", rt,
+                                kt[:, None] * jnp.exp(dec))
+            a_diag = jnp.where(strictly_lower[None, None], a_diag, 0.0)
+            # u-bonus on the true diagonal (s == t)
+            bonus = jnp.einsum("bthn,hn,bthn->bht", rt, u.astype(f32), kt)
+            a_diag = a_diag + bonus[..., None] * jnp.eye(tau, dtype=f32)
+            y = y.at[:, t0:t0 + tau].add(
+                jnp.einsum("bhts,bshj->bthj", a_diag, vt))
+
+        # state update: S' = diag(exp(cw_last)) S + Σ_s exp(cw_last-cw_s) k_s v_s^T
+        cw_last = cwq[:, -1]  # (b, h, n)
+        kdec = kq * jnp.exp(cw_last[:, None] - cwq)  # ≤ 0 exponent
+        new_state = state * jnp.exp(cw_last)[..., None] + jnp.einsum(
+            "bshi,bshj->bhij", kdec, vq)
+        return new_state, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3, 4) for a in (rc, kc, vc, cw, ecw))
+    final, ys = jax.lax.scan(chunk_body, s0, xs)
+    o = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, n)
+    return o.astype(r.dtype), final
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 block (time-mix + channel-mix)
+# ---------------------------------------------------------------------------
+
+def init_rwkv6(key, d_model: int, d_ff: int, rc: RWKV6Config, dtype) -> dict:
+    ks = jax.random.split(key, 12)
+    d = d_model
+    h = d // rc.head_dim
+    tr = rc.token_shift_rank
+    return {
+        "tm": {
+            "mu_x": jnp.zeros((d,), dtype),
+            "mu_rwkvg": 0.5 * jnp.ones((5, d), dtype),
+            "ts_w1": dense_init(ks[0], (d, 5 * tr), dtype, scale=0.01),
+            "ts_w2": dense_init(ks[1], (5, tr, d), dtype, scale=0.01),
+            "w0": (-2.0) * jnp.ones((d,), jnp.float32),
+            "td_w1": dense_init(ks[2], (d, rc.decay_rank), dtype, scale=0.01),
+            "td_w2": dense_init(ks[3], (rc.decay_rank, d), dtype, scale=0.01),
+            "w_r": dense_init(ks[4], (d, d), dtype),
+            "w_k": dense_init(ks[5], (d, d), dtype),
+            "w_v": dense_init(ks[6], (d, d), dtype),
+            "w_g": dense_init(ks[7], (d, d), dtype),
+            "w_o": dense_init(ks[8], (d, d), dtype),
+            "u": jnp.zeros((h, rc.head_dim), jnp.float32),
+            "ln_x_scale": jnp.ones((d,), dtype),
+            "ln_x_bias": jnp.zeros((d,), dtype),
+        },
+        "cm": {
+            "mu_k": 0.5 * jnp.ones((d,), dtype),
+            "mu_r": 0.5 * jnp.ones((d,), dtype),
+            "w_k": dense_init(ks[9], (d, d_ff), dtype),
+            "w_v": dense_init(ks[10], (d_ff, d), dtype),
+            "w_r": dense_init(ks[11], (d, d), dtype),
+        },
+    }
+
+
+def _ddlerp(tm, x, x_prev):
+    """Data-dependent token-shift interpolation → 5 mixed streams (r,w,k,v,g)."""
+    sx = x_prev - x
+    xxx = x + sx * tm["mu_x"]
+    b, s, d = x.shape
+    tr = tm["ts_w1"].shape[1] // 5
+    t = jnp.tanh(xxx @ tm["ts_w1"]).reshape(b, s, 5, tr)
+    offs = jnp.einsum("bsfr,frd->fbsd", t, tm["ts_w2"])  # (5, B, S, D)
+    mixed = x[None] + sx[None] * (tm["mu_rwkvg"][:, None, None] + offs)
+    return mixed  # order: r, w, k, v, g
+
+
+def _headify(x, head_dim):
+    b, s, d = x.shape
+    return x.reshape(b, s, d // head_dim, head_dim)
+
+
+def rwkv6_time_mix(tm, x, x_prev_tok, rc: RWKV6Config, wkv_state=None,
+                   *, use_chunked: bool = True, use_pallas: bool = False):
+    """x: (B, S, D); x_prev_tok: (B, S, D) (token-shifted x).
+
+    Returns (out (B,S,D), final_wkv_state (B,H,N,N)).
+    """
+    b, s, d = x.shape
+    xr, xw, xk, xv, xg = _ddlerp(tm, x, x_prev_tok)
+    r = _headify(xr @ tm["w_r"], rc.head_dim)
+    kk = _headify(xk @ tm["w_k"], rc.head_dim)
+    vv = _headify(xv @ tm["w_v"], rc.head_dim)
+    g = jax.nn.silu(xg @ tm["w_g"])
+    # data-dependent decay, lw ≤ 0 by construction
+    ww = tm["w0"] + jnp.tanh(xw @ tm["td_w1"]) @ tm["td_w2"]
+    lw = -jnp.exp(ww.astype(jnp.float32))
+    lw = _headify(lw, rc.head_dim)
+    if use_pallas and use_chunked and wkv_state is None:
+        from repro.kernels.ops import wkv6 as _pallas_wkv6
+        o, state = _pallas_wkv6(r, kk, vv, lw, tm["u"], chunk=rc.chunk_size)
+    else:
+        wkv = wkv6_chunked if use_chunked else wkv6_recurrent
+        o, state = wkv(r, kk, vv, lw, tm["u"],
+                       init_state=wkv_state,
+                       **({"chunk": rc.chunk_size} if use_chunked else {}))
+    o = o.reshape(b, s, d)
+    # per-head group norm
+    oh = o.reshape(b, s, d // rc.head_dim, rc.head_dim).astype(jnp.float32)
+    mean = oh.mean(-1, keepdims=True)
+    var = oh.var(-1, keepdims=True)
+    oh = (oh - mean) * jax.lax.rsqrt(var + 1e-5)
+    o = oh.reshape(b, s, d).astype(x.dtype)
+    o = o * tm["ln_x_scale"] + tm["ln_x_bias"]
+    return (o * g) @ tm["w_o"], state
+
+
+def rwkv6_channel_mix(cm, x, x_prev_tok):
+    sx = x_prev_tok - x
+    xk = x + sx * cm["mu_k"]
+    xr = x + sx * cm["mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ cm["w_k"]))
+    return jax.nn.sigmoid(xr @ cm["w_r"]) * (kk @ cm["w_v"])
+
+
+def token_shift(x, last_x=None):
+    """(B, S, D) → previous-token stream; position 0 gets last_x (or 0)."""
+    prev = jnp.roll(x, 1, axis=1)
+    first = (jnp.zeros_like(x[:, 0]) if last_x is None else last_x)
+    return prev.at[:, 0].set(first)

@@ -1,0 +1,539 @@
+"""Unified model: composes attention/MLA/MoE/Mamba2/RWKV6 blocks per config.
+
+Structure
+  * params["segments"][i] — a *stacked* pytree of identical layers that is
+    consumed with ``lax.scan`` (keeps HLO size O(1) in depth: deepseek-v2's
+    60 layers compile as one scanned body).
+  * params["shared_block"] — zamba2's single weight-shared attention block,
+    applied after every ``shared_attn_every`` mamba layers (a static python
+    loop — ≤ 7 applications).
+
+Three entry points:
+  * ``forward``      — full-sequence teacher-forced logits (training).
+  * ``prefill``      — full sequence, returns (last-token logits, cache).
+  * ``decode_step``  — one token against the cache.
+
+Cache layout (``init_cache``): a dict with scalar ``pos`` plus per-segment
+stacked caches; KV caches are ring buffers of capacity
+``min(max_len, window)`` so sliding-window archs stay O(window) in memory
+(what makes mixtral/h2o-danube long_500k-legal).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import attention as attn_lib
+from repro.models import mla as mla_lib
+from repro.models import moe as moe_lib
+from repro.models import mamba2 as m2_lib
+from repro.models import rwkv6 as r6_lib
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# segment plan
+# ---------------------------------------------------------------------------
+
+def segment_plan(cfg: ModelConfig) -> list[tuple[str, int]]:
+    """[(kind, n_layers)] — contiguous runs of identical block kinds."""
+    kinds = cfg.block_kinds()
+    if cfg.shared_attn_every:
+        # split mamba stack into groups; shared block applied between groups
+        segs = []
+        rest = cfg.n_layers
+        while rest > 0:
+            take = min(cfg.shared_attn_every, rest)
+            segs.append((kinds[0], take))
+            rest -= take
+        return segs
+    segs: list[tuple[str, int]] = []
+    for k in kinds:
+        if segs and segs[-1][0] == k:
+            segs[-1] = (k, segs[-1][1] + 1)
+        else:
+            segs.append((k, 1))
+    return segs
+
+
+def n_shared_applications(cfg: ModelConfig) -> int:
+    if not cfg.shared_attn_every:
+        return 0
+    # applied after every *full* group of shared_attn_every layers
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_attn_weights(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    dt = cfg.param_jdtype
+    return {
+        "wq": L.dense_init(ks[0], (d, cfg.n_heads * hd), dt),
+        "wk": L.dense_init(ks[1], (d, cfg.n_kv_heads * hd), dt),
+        "wv": L.dense_init(ks[2], (d, cfg.n_kv_heads * hd), dt),
+        "wo": L.dense_init(ks[3], (cfg.n_heads * hd, d), dt),
+    }
+
+
+def init_layer(key, kind: str, cfg: ModelConfig) -> dict:
+    dt = cfg.param_jdtype
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "attn":
+        return {"ln1": L.init_rmsnorm(d, dt), "attn": _init_attn_weights(k1, cfg),
+                "ln2": L.init_rmsnorm(d, dt),
+                "mlp": L.init_mlp(k2, d, cfg.d_ff, cfg.mlp_kind, dt)}
+    if kind == "moe":
+        return {"ln1": L.init_rmsnorm(d, dt), "attn": _init_attn_weights(k1, cfg),
+                "ln2": L.init_rmsnorm(d, dt),
+                "moe": moe_lib.init_moe(k2, d, cfg.moe, dt)}
+    if kind == "mla_dense":
+        return {"ln1": L.init_rmsnorm(d, dt),
+                "mla": mla_lib.init_mla(k1, d, cfg.n_heads, cfg.mla, dt),
+                "ln2": L.init_rmsnorm(d, dt),
+                "mlp": L.init_mlp(k2, d, cfg.d_ff, cfg.mlp_kind, dt)}
+    if kind == "mla_moe":
+        return {"ln1": L.init_rmsnorm(d, dt),
+                "mla": mla_lib.init_mla(k1, d, cfg.n_heads, cfg.mla, dt),
+                "ln2": L.init_rmsnorm(d, dt),
+                "moe": moe_lib.init_moe(k2, d, cfg.moe, dt)}
+    if kind == "mamba2":
+        return {"ln": L.init_rmsnorm(d, dt),
+                "mamba": m2_lib.init_mamba2(k1, d, cfg.mamba2, dt)}
+    if kind == "rwkv6":
+        p = r6_lib.init_rwkv6(k1, d, cfg.d_ff, cfg.rwkv6, dt)
+        p["ln1"] = L.init_rmsnorm(d, dt)
+        p["ln2"] = L.init_rmsnorm(d, dt)
+        return p
+    raise ValueError(kind)
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dt = cfg.param_jdtype
+    keys = jax.random.split(key, 8)
+    n_tables = max(1, cfg.num_codebooks)
+    embed_shape = ((cfg.vocab_size, cfg.d_model) if n_tables == 1
+                   else (n_tables, cfg.vocab_size, cfg.d_model))
+    params: dict[str, Any] = {
+        "embed": {"tok": L.embed_init(keys[0], embed_shape, dt)},
+        "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        head_shape = ((cfg.d_model, cfg.vocab_size) if n_tables == 1
+                      else (n_tables, cfg.d_model, cfg.vocab_size))
+        params["lm_head"] = L.dense_init(keys[1], head_shape, dt)
+    segs = []
+    for i, (kind, n) in enumerate(segment_plan(cfg)):
+        lkeys = jax.random.split(jax.random.fold_in(keys[2], i), n)
+        segs.append(jax.vmap(lambda k: init_layer(k, kind, cfg))(lkeys))
+    params["segments"] = tuple(segs)
+    if cfg.shared_attn_every:
+        params["shared_block"] = init_layer(keys[3], "attn", cfg)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# rope helper
+# ---------------------------------------------------------------------------
+
+def _rope_tables(cfg: ModelConfig, positions: jnp.ndarray, head_dim: int):
+    """positions: (S,) or (B,S) or (3,B,S) for mrope."""
+    if cfg.mrope_sections:
+        assert positions.ndim == 3, "mrope needs (3, B, S) positions"
+        return L.mrope_cos_sin(positions, head_dim, cfg.rope_theta,
+                               cfg.mrope_sections)
+    return L.rope_cos_sin(positions, head_dim, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# block forwards (full-sequence)
+# ---------------------------------------------------------------------------
+
+def _attn_seq(p, x, cos, sin, cfg: ModelConfig, *, window: int,
+              return_kv: bool):
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q = (h @ p["attn"]["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (h @ p["attn"]["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (h @ p["attn"]["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    blk = 512 if s % 512 == 0 else s
+    if cfg.use_pallas:
+        from repro.kernels.ops import flash_attention as _pallas_flash
+        o = _pallas_flash(q, k, v, causal=True, window=window,
+                          q_blk=min(128, blk), kv_blk=min(128, blk))
+    else:
+        o = attn_lib.flash_attention_jnp(
+            q, k, v, causal=True, window=window, q_block=blk, k_block=blk)
+    x = x + o.reshape(b, s, cfg.n_heads * hd) @ p["attn"]["wo"]
+    return (x, (k, v)) if return_kv else (x, None)
+
+
+def _ffn_seq(p, x, cfg: ModelConfig, capacity_factor: float | None = None):
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        y, aux = moe_lib.apply_moe(p["moe"], h, cfg.moe,
+                                   capacity_factor=capacity_factor,
+                                   buf_spec=cfg.moe_buf_spec,
+                                   hidden_spec=cfg.moe_hidden_spec)
+    else:
+        y, aux = L.apply_mlp(p["mlp"], h, cfg.mlp_kind), 0.0
+    return x + y, aux
+
+
+def block_seq(kind: str, p, x, ctx, *, return_cache: bool):
+    """Full-sequence forward of one block. Returns (x, cache_entry, aux)."""
+    cfg: ModelConfig = ctx["cfg"]
+    cos, sin = ctx["cos"], ctx["sin"]
+    if kind in ("attn", "moe"):
+        x, kv = _attn_seq(p, x, cos, sin, cfg, window=cfg.sliding_window,
+                          return_kv=return_cache)
+        x, aux = _ffn_seq(p, x, cfg)
+        cache = None
+        if return_cache:
+            k, v = kv
+            cap = ctx["cache_cap"]
+            k_c, v_c = _ring_from_prefill(k, cap), _ring_from_prefill(v, cap)
+            cache = {"k": k_c, "v": v_c}
+        return x, cache, aux
+    if kind in ("mla_dense", "mla_moe"):
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        o, ckv, kpe = mla_lib.mla_prefill(
+            p["mla"], h, cos, sin, cfg.n_heads, cfg.mla, cfg.norm_eps)
+        x = x + o
+        x, aux = _ffn_seq(p, x, cfg)
+        cache = {"ckv": ckv, "kpe": kpe} if return_cache else None
+        return x, cache, aux
+    if kind == "mamba2":
+        h = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+        y, (conv_tail, ssm) = m2_lib.mamba2_forward(
+            p["mamba"], h, cfg.mamba2, cfg.norm_eps)
+        x = x + y
+        cache = {"conv": conv_tail, "ssm": ssm} if return_cache else None
+        return x, cache, 0.0
+    if kind == "rwkv6":
+        h1 = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        prev1 = r6_lib.token_shift(h1)
+        o, wkv_state = r6_lib.rwkv6_time_mix(p["tm"], h1, prev1, cfg.rwkv6,
+                                             use_pallas=cfg.use_pallas)
+        x = x + o
+        h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        prev2 = r6_lib.token_shift(h2)
+        x = x + r6_lib.rwkv6_channel_mix(p["cm"], h2, prev2)
+        cache = None
+        if return_cache:
+            cache = {"x_tm": h1[:, -1], "x_cm": h2[:, -1], "wkv": wkv_state}
+        return x, cache, 0.0
+    raise ValueError(kind)
+
+
+def _ring_from_prefill(k: jnp.ndarray, cap: int) -> jnp.ndarray:
+    """Place the last ``cap`` tokens of k (B,S,KV,hd) at ring slots t % cap."""
+    b, s, n_kv, hd = k.shape
+    if s <= cap:
+        out = jnp.zeros((b, cap, n_kv, hd), k.dtype)
+        return jax.lax.dynamic_update_slice(out, k, (0, 0, 0, 0))
+    tail = k[:, -cap:]
+    slots = (jnp.arange(s - cap, s)) % cap
+    out = jnp.zeros((b, cap, n_kv, hd), k.dtype)
+    return out.at[:, slots].set(tail)
+
+
+# ---------------------------------------------------------------------------
+# block forwards (single-token decode)
+# ---------------------------------------------------------------------------
+
+def _dropless_cf(cfg: ModelConfig):
+    """Capacity factor making decode dispatch dropless (capacity = T)."""
+    if cfg.moe is None:
+        return None
+    return cfg.moe.num_experts / cfg.moe.num_experts_per_tok
+
+
+def block_decode(kind: str, p, x, cache, ctx):
+    """x: (B, 1, D). Returns (x, new_cache)."""
+    cfg: ModelConfig = ctx["cfg"]
+    cos, sin = ctx["cos"], ctx["sin"]
+    pos = ctx["pos"]  # scalar int32: index of the token being decoded
+    if kind in ("attn", "moe"):
+        b = x.shape[0]
+        hd = cfg.resolved_head_dim
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        q = (h @ p["attn"]["wq"]).reshape(b, 1, cfg.n_heads, hd)
+        k = (h @ p["attn"]["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
+        v = (h @ p["attn"]["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        cap = cache["k"].shape[1]
+        slot = jnp.mod(pos, cap)
+        k_c = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        v_c = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        n_valid = jnp.minimum(pos + 1, cap)
+        valid = (jnp.arange(cap) < n_valid)[None].repeat(b, 0)
+        o = attn_lib.decode_attention(q, k_c, v_c, valid)
+        x = x + o.reshape(b, 1, cfg.n_heads * hd) @ p["attn"]["wo"]
+        x, _ = _ffn_seq(p, x, cfg, capacity_factor=_dropless_cf(cfg))
+        return x, {"k": k_c, "v": v_c}
+    if kind in ("mla_dense", "mla_moe"):
+        b = x.shape[0]
+        m = cfg.mla
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        ckv_new, kpe_new = mla_lib.mla_latents(
+            p["mla"], h, cos, sin, m, cfg.norm_eps)
+        cap = cache["ckv"].shape[1]
+        slot = jnp.mod(pos, cap)
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv_new, (0, slot, 0))
+        kpe_c = jax.lax.dynamic_update_slice(
+            cache["kpe"], kpe_new, (0, slot, 0))
+        n_valid = jnp.minimum(pos + 1, cap)
+        valid = (jnp.arange(cap) < n_valid)[None].repeat(b, 0)
+        o = mla_lib.mla_decode(p["mla"], h, cos, sin, ckv_c, kpe_c, valid,
+                               cfg.n_heads, m, cfg.norm_eps)
+        x = x + o
+        x, _ = _ffn_seq(p, x, cfg, capacity_factor=_dropless_cf(cfg))
+        return x, {"ckv": ckv_c, "kpe": kpe_c}
+    if kind == "mamba2":
+        h = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+        y, (conv_tail, ssm) = m2_lib.mamba2_decode(
+            p["mamba"], h, (cache["conv"], cache["ssm"]), cfg.mamba2,
+            cfg.norm_eps)
+        return x + y, {"conv": conv_tail, "ssm": ssm}
+    if kind == "rwkv6":
+        h1 = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        o, wkv = r6_lib.rwkv6_time_mix(
+            p["tm"], h1, cache["x_tm"][:, None], cfg.rwkv6,
+            wkv_state=cache["wkv"], use_chunked=False)
+        x = x + o
+        h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + r6_lib.rwkv6_channel_mix(p["cm"], h2, cache["x_cm"][:, None])
+        return x, {"x_tm": h1[:, 0], "x_cm": h2[:, 0], "wkv": wkv}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, cfg: ModelConfig, tokens, patch_embeds=None):
+    tok = params["embed"]["tok"]
+    if cfg.num_codebooks:
+        # tokens: (B, K, S); tok: (K, V, D) — sum the K codebook embeddings
+        parts = [jnp.take(tok[i], tokens[:, i], axis=0)
+                 for i in range(cfg.num_codebooks)]
+        x = sum(parts)
+    else:
+        x = jnp.take(tok, tokens, axis=0)  # (B, S, D)
+    if cfg.num_patch_positions and patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    return x.astype(cfg.compute_jdtype)
+
+
+def lm_logits(params, cfg: ModelConfig, x):
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"]["tok"]
+        if cfg.num_codebooks:
+            return jnp.einsum("bsd,kvd->bksv", x, w)
+        return x @ w.T
+    w = params["lm_head"]
+    if cfg.num_codebooks:
+        return jnp.einsum("bsd,kdv->bksv", x, w)
+    return x @ w
+
+
+# ---------------------------------------------------------------------------
+# full model entry points
+# ---------------------------------------------------------------------------
+
+def _wsc(x, cfg: ModelConfig):
+    """Residual-stream sharding constraint (sequence parallelism)."""
+    if cfg.residual_spec is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*cfg.residual_spec))
+
+
+def _default_positions(cfg: ModelConfig, b: int, s: int):
+    pos = jnp.arange(s, dtype=jnp.int32)
+    if cfg.mrope_sections:
+        return jnp.broadcast_to(pos, (3, b, s))
+    return pos
+
+
+def _shared_ctx(cfg, positions, b, s):
+    hd = (cfg.resolved_head_dim if cfg.mla is None
+          else cfg.mla.qk_rope_head_dim)
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+    cos, sin = _rope_tables(cfg, positions, hd)
+    if cfg.residual_spec is not None and cos.ndim == 3:
+        # batched rope tables (M-RoPE): shard like the residual stream —
+        # otherwise every layer all-gathers a replicated (B, S, hd/2)
+        # table (observed: 10 GB/device collectives on qwen2-vl train).
+        from jax.sharding import PartitionSpec as P
+        spec = P(*cfg.residual_spec[:2], None)
+        cos = jax.lax.with_sharding_constraint(cos, spec)
+        sin = jax.lax.with_sharding_constraint(sin, spec)
+    return {"cfg": cfg, "cos": cos, "sin": sin}
+
+
+def forward(params, cfg: ModelConfig, tokens, positions=None,
+            patch_embeds=None, *, remat: bool = True):
+    """Teacher-forced logits. tokens: (B,S) or (B,K,S). → (logits, aux_loss)."""
+    x = _wsc(embed_inputs(params, cfg, tokens, patch_embeds), cfg)
+    b, s, _ = x.shape
+    ctx = _shared_ctx(cfg, positions, b, s)
+    plan = segment_plan(cfg)
+    n_shared = n_shared_applications(cfg)
+    aux_total = 0.0
+    for i, ((kind, n), seg) in enumerate(zip(plan, params["segments"])):
+        def body(carry, p_layer, _kind=kind):
+            y, c, aux = block_seq(_kind, p_layer, carry, ctx,
+                                  return_cache=False)
+            return _wsc(y, cfg), aux
+        body_fn = jax.checkpoint(body) if remat else body
+        x, auxs = jax.lax.scan(body_fn, x, seg)
+        aux_total = aux_total + jnp.sum(auxs)
+        if cfg.shared_attn_every and i < n_shared:
+            x, _, aux = block_seq("attn", params["shared_block"], x, ctx,
+                                  return_cache=False)
+            aux_total = aux_total + aux
+    logits = lm_logits(params, cfg, x)
+    return logits, aux_total
+
+
+def cache_capacity(cfg: ModelConfig, max_len: int) -> int:
+    return min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Zero cache for autoregressive decoding."""
+    dt = dtype or cfg.compute_jdtype
+    cap = cache_capacity(cfg, max_len)
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    segs = []
+    for kind, n in segment_plan(cfg):
+        if kind in ("attn", "moe"):
+            segs.append({
+                "k": jnp.zeros((n, batch, cap, cfg.n_kv_heads, hd), dt),
+                "v": jnp.zeros((n, batch, cap, cfg.n_kv_heads, hd), dt)})
+        elif kind.startswith("mla"):
+            m = cfg.mla
+            segs.append({
+                "ckv": jnp.zeros((n, batch, max_len, m.kv_lora_rank), dt),
+                "kpe": jnp.zeros((n, batch, max_len, m.qk_rope_head_dim), dt)})
+        elif kind == "mamba2":
+            mc = cfg.mamba2
+            conv_dim = mc.d_inner(d) + 2 * mc.n_groups * mc.d_state
+            segs.append({
+                "conv": jnp.zeros((n, batch, mc.d_conv - 1, conv_dim), dt),
+                "ssm": jnp.zeros((n, batch, mc.n_heads(d), mc.head_dim,
+                                  mc.d_state), dt)})
+        elif kind == "rwkv6":
+            rc = cfg.rwkv6
+            h = d // rc.head_dim
+            segs.append({
+                "x_tm": jnp.zeros((n, batch, d), dt),
+                "x_cm": jnp.zeros((n, batch, d), dt),
+                "wkv": jnp.zeros((n, batch, h, rc.head_dim, rc.head_dim),
+                                 jnp.float32)})
+        else:
+            raise ValueError(kind)
+    cache = {"pos": jnp.zeros((), jnp.int32), "segments": tuple(segs)}
+    n_shared = n_shared_applications(cfg)
+    if n_shared:
+        cache["shared"] = {
+            "k": jnp.zeros((n_shared, batch, cap, cfg.n_kv_heads, hd), dt),
+            "v": jnp.zeros((n_shared, batch, cap, cfg.n_kv_heads, hd), dt)}
+    return cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, positions=None,
+            patch_embeds=None, max_len: Optional[int] = None):
+    """Run the full prompt, build the cache. Returns (last_logits, cache)."""
+    x = _wsc(embed_inputs(params, cfg, tokens, patch_embeds), cfg)
+    b, s, _ = x.shape
+    max_len = max_len or s
+    cap = cache_capacity(cfg, max_len)
+    ctx = _shared_ctx(cfg, positions, b, s)
+    ctx["cache_cap"] = cap
+    plan = segment_plan(cfg)
+    n_shared = n_shared_applications(cfg)
+    segs_cache, shared_caches = [], []
+    for i, ((kind, n), seg) in enumerate(zip(plan, params["segments"])):
+        def body(carry, p_layer, _kind=kind):
+            y, c, _aux = block_seq(_kind, p_layer, carry, ctx,
+                                   return_cache=True)
+            return _wsc(y, cfg), c
+        x, seg_cache = jax.lax.scan(body, x, seg)
+        # MLA caches are allocated at max_len; pad prefilled region
+        if kind.startswith("mla") and max_len > s:
+            seg_cache = {
+                k2: jnp.pad(v2, ((0, 0), (0, 0), (0, max_len - s), (0, 0)))
+                for k2, v2 in seg_cache.items()}
+        segs_cache.append(seg_cache)
+        if cfg.shared_attn_every and i < n_shared:
+            x, c, _ = block_seq("attn", params["shared_block"], x, ctx,
+                                return_cache=True)
+            shared_caches.append(c)
+    logits = lm_logits(params, cfg, x[:, -1:])
+    cache = {"pos": jnp.asarray(s, jnp.int32), "segments": tuple(segs_cache)}
+    if shared_caches:
+        cache["shared"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *shared_caches)
+    # (B, 1, V) → (B, V);  codebooks: (B, K, 1, V) → (B, K, V)
+    last = logits[:, :, 0] if cfg.num_codebooks else logits[:, 0]
+    return last, cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, positions=None):
+    """token: (B,) or (B,K) codes. Returns (logits (B,V) | (B,K,V), cache)."""
+    if cfg.num_codebooks:
+        tokens = token[:, :, None]  # (B, K, 1)
+    else:
+        tokens = token[:, None]  # (B, 1)
+    x = embed_inputs(params, cfg, tokens)
+    b = x.shape[0]
+    pos = cache["pos"]
+    if positions is None:
+        p1 = jnp.full((b, 1), pos, jnp.int32)
+        positions = (jnp.broadcast_to(p1, (3, b, 1))
+                     if cfg.mrope_sections else p1)
+    ctx = _shared_ctx(cfg, positions, b, 1)
+    ctx["pos"] = pos
+    plan = segment_plan(cfg)
+    n_shared = n_shared_applications(cfg)
+    new_segs, new_shared = [], []
+    for i, ((kind, n), (seg, seg_cache)) in enumerate(
+            zip(plan, zip(params["segments"], cache["segments"]))):
+        def body(carry, layer, _kind=kind):
+            p_layer, c_layer = layer
+            y, c_new = block_decode(_kind, p_layer, carry, c_layer, ctx)
+            return y, c_new
+        x, seg_cache_new = jax.lax.scan(body, x, (seg, seg_cache))
+        new_segs.append(seg_cache_new)
+        if cfg.shared_attn_every and i < n_shared:
+            c_i = jax.tree.map(lambda a, _i=i: a[_i], cache["shared"])
+            x, c_new = block_decode("attn", params["shared_block"], x, c_i,
+                                    ctx)
+            new_shared.append(c_new)
+    logits = lm_logits(params, cfg, x)  # (B, 1, V) or (B, 1, K, V)
+    new_cache = {"pos": pos + 1, "segments": tuple(new_segs)}
+    if new_shared:
+        new_cache["shared"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *new_shared)
+    if cfg.num_codebooks:
+        return logits[:, :, 0], new_cache  # (B, K, V)? see lm_logits
+    return logits[:, 0], new_cache

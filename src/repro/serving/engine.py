@@ -1,0 +1,80 @@
+"""Serving engine: prefill + decode step factories and batched generation.
+
+``make_serve_step(cfg)`` returns the single-token decode function that the
+multi-pod dry-run lowers for the ``decode_32k`` / ``long_500k`` shapes:
+one new token for every sequence in the batch against a seq_len KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+
+def make_prefill(cfg: ModelConfig):
+    def prefill_step(params, batch, max_len):
+        return tf.prefill(params, cfg, batch["tokens"],
+                          positions=batch.get("positions"),
+                          patch_embeds=batch.get("patch_embeds"),
+                          max_len=max_len)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, sample: str = "greedy",
+                    temperature: float = 1.0):
+    """(params, token, cache[, key]) → (next_token, logits, cache)."""
+
+    def serve_step(params, token, cache, key=None):
+        logits, cache = tf.decode_step(params, cfg, token, cache)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            assert key is not None
+            nxt = jax.random.categorical(
+                key, logits.astype(jnp.float32) / temperature, axis=-1
+            ).astype(jnp.int32)
+        return nxt, logits, cache
+
+    return serve_step
+
+
+class GenerationResult(NamedTuple):
+    tokens: jnp.ndarray   # (B, steps) or (B, K, steps)
+    cache: Any
+
+
+def generate(params, cfg: ModelConfig, prompt_batch: dict, *, steps: int,
+             max_len: int | None = None, sample: str = "greedy",
+             temperature: float = 1.0, key=None) -> GenerationResult:
+    """Prefill the prompt then autoregressively decode ``steps`` tokens."""
+    tokens = prompt_batch["tokens"]
+    prompt_len = tokens.shape[-1]
+    total = max_len or (prompt_len + steps + 1)
+    logits, cache = tf.prefill(
+        params, cfg, tokens,
+        positions=prompt_batch.get("positions"),
+        patch_embeds=prompt_batch.get("patch_embeds"),
+        max_len=total)
+    serve_step = jax.jit(make_serve_step(cfg, sample=sample,
+                                         temperature=temperature))
+    if sample == "greedy":
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        key, k0 = jax.random.split(key)
+        cur = jax.random.categorical(
+            k0, logits.astype(jnp.float32) / temperature, axis=-1
+        ).astype(jnp.int32)
+    outs = [cur]
+    for i in range(steps - 1):
+        if sample == "greedy":
+            cur, _, cache = serve_step(params, cur, cache)
+        else:
+            key, ki = jax.random.split(key)
+            cur, _, cache = serve_step(params, cur, cache, ki)
+        outs.append(cur)
+    return GenerationResult(jnp.stack(outs, axis=-1), cache)

@@ -1,0 +1,282 @@
+"""Sharding policy: PartitionSpecs per (architecture × input shape × mesh).
+
+Megatron-style tensor parallelism over the "model" axis + data parallelism
+over ("pod",) "data":
+
+  * attention: wq/wk/wv column-parallel (heads), wo row-parallel;
+  * MLP: w_gate/w_up column-parallel (d_ff), w_down row-parallel;
+  * MoE: expert-parallel over the expert dim when num_experts divides the
+    model axis (deepseek-v2: 160/16), else tensor-parallel inside each
+    expert (mixtral: 8 experts < 16);
+  * MLA: q_a/kv_a row-parallel (d_model), q_b/kv_b column-parallel (heads),
+    o row-parallel;
+  * Mamba2: in_proj/conv column-parallel (channel dim), out_proj
+    row-parallel, per-head scalars model-sharded;
+  * RWKV6: r/k/v/g column-parallel, w_o row-parallel, token-shift/decay
+    LoRAs replicated (tiny);
+  * embeddings/LM head vocab-sharded.
+
+Decode caches shard batch over data and head_dim over model (head_dim is
+128-divisible for every arch except h2o-danube-3-4b, which falls back to
+sequence-sharding the cache — its head_dim is 120). ``long_500k`` (batch=1)
+shards the cache *sequence* over the data axis instead (context
+parallelism).
+
+ZeRO-1: optimizer moments additionally shard their first replicated,
+divisible dimension over "data".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    dp: tuple[str, ...]  # data-parallel axes ("data",) or ("pod", "data")
+    tp: str = "model"
+
+    @property
+    def dp_spec(self):
+        return self.dp if len(self.dp) > 1 else self.dp[0]
+
+
+def mesh_axes(mesh: Mesh) -> MeshAxes:
+    names = mesh.axis_names
+    if "pod" in names:
+        return MeshAxes(dp=("pod", "data"))
+    return MeshAxes(dp=("data",))
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _pad(spec_tail: tuple, ndim: int) -> P:
+    """Left-pad a trailing-dims rule with None for stacked/leading dims."""
+    assert ndim >= len(spec_tail), (ndim, spec_tail)
+    return P(*((None,) * (ndim - len(spec_tail)) + spec_tail))
+
+
+def param_spec_for_path(path: str, ndim: int, shape: tuple,
+                        cfg: ModelConfig, tp_size: int) -> P:
+    """Sharding rule for one parameter leaf, keyed on its pytree path."""
+    tp = "model"
+    col = (None, tp)
+    row = (tp, None)
+
+    if "experts" in path:
+        e = cfg.moe.num_experts
+        if e % tp_size == 0:  # expert parallelism
+            return _pad((tp, None, None), ndim)
+        if path.endswith(("w_gate", "w_up")):  # TP inside experts
+            return _pad((None, None, tp), ndim)
+        return _pad((None, tp, None), ndim)  # w_down: (E, F, D)
+    if path.endswith("router"):
+        return _pad((None, None), ndim)
+    if "embed" in path and path.endswith("tok"):
+        return _pad((tp, None), ndim)
+    if path.endswith("lm_head"):
+        return _pad((None, tp), ndim)
+    # attention
+    if path.endswith(("wq", "wk", "wv")):
+        return _pad(col, ndim)
+    if path.endswith("wo"):
+        return _pad(row, ndim)
+    # MLA
+    if path.endswith(("mla/q_a", "mla/kv_a")):
+        return _pad(row, ndim)
+    if path.endswith(("mla/q_b", "mla/kv_b")):
+        return _pad(col, ndim)
+    if path.endswith("mla/o"):
+        return _pad(row, ndim)
+    # Mamba2
+    if path.endswith("in_proj"):
+        return _pad(col, ndim)
+    if path.endswith("out_proj"):
+        return _pad(row, ndim)
+    if path.endswith("conv_w"):
+        return _pad((None, tp), ndim)
+    if path.endswith("conv_b"):
+        return _pad((tp,), ndim)
+    if path.endswith(("A_log", "dt_bias")) or path.endswith("mamba/D"):
+        return _pad((tp,), ndim)
+    if "mamba/norm" in path:
+        return _pad((tp,), ndim)
+    # dense MLP (also MoE shared experts)
+    if path.endswith(("w_gate", "w_up")):
+        return _pad(col, ndim)
+    if path.endswith("w_down"):
+        return _pad(row, ndim)
+    # RWKV6 time-mix / channel-mix
+    if path.endswith(("tm/w_r", "tm/w_k", "tm/w_v", "tm/w_g")):
+        return _pad(col, ndim)
+    if path.endswith("tm/w_o"):
+        return _pad(row, ndim)
+    if path.endswith("tm/u"):
+        return _pad((tp, None), ndim)
+    if path.endswith(("ln_x_scale", "ln_x_bias")):
+        return _pad((tp,), ndim)
+    if path.endswith(("cm/w_k",)):
+        return _pad(col, ndim)
+    if path.endswith("cm/w_v"):
+        return _pad(row, ndim)
+    # everything else (norm scales, LoRAs, mus, cm/w_r): replicated
+    return P(*((None,) * ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any, mesh: Mesh,
+                *, inference: bool = False):
+    """PartitionSpec pytree matching the params pytree.
+
+    inference=True additionally shards each parameter's first free,
+    divisible dimension over "data" (FSDP-style weight sharding): serving
+    has no optimizer state, so without this the weights are replicated
+    across the data axis — 29.5 GiB/device of deepseek-v2 parameters
+    versus 16 GiB of HBM. XLA all-gathers weights per layer on use.
+    """
+    tp_size = _axis_size(mesh, "model")
+
+    def f(path, leaf):
+        spec = param_spec_for_path(_path_str(path), len(leaf.shape),
+                                   tuple(leaf.shape), cfg, tp_size)
+        if inference:
+            spec = zero1_spec(spec, tuple(leaf.shape), mesh)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: shard optimizer moments further over "data"
+# ---------------------------------------------------------------------------
+
+def zero1_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Extend a param spec: put "data" on the first free, divisible dim."""
+    dp = "data"
+    dp_size = _axis_size(mesh, dp)
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (axis, dim) in enumerate(zip(parts, shape)):
+        if axis is None and dim % dp_size == 0 and dim >= dp_size:
+            parts[i] = dp
+            return P(*parts)
+    return P(*parts)  # no divisible free dim → leave as param spec
+
+
+def opt_state_specs(param_spec_tree, params_shape, mesh: Mesh, *,
+                    zero1: bool = True):
+    """Specs for AdamState(step, mu, nu) given the param specs."""
+    if zero1:
+        moments = jax.tree.map(
+            lambda sp, sh: zero1_spec(sp, tuple(sh.shape), mesh),
+            param_spec_tree, params_shape)
+    else:
+        moments = param_spec_tree
+    from repro.training.optimizer import AdamState
+    return AdamState(P(), moments, moments)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, batch_shape: dict, mesh: Mesh):
+    ax = mesh_axes(mesh)
+    dp = ax.dp_spec
+
+    def f(path, leaf):
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        if name.endswith("positions"):  # (3, B, S)
+            return P(None, dp, None)
+        if leaf.shape and leaf.shape[0] == 1:
+            return P(*((None,) * nd))  # batch of 1: replicate
+        return P(*((dp,) + (None,) * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(f, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, cache_shape: dict, mesh: Mesh,
+                *, batch: int):
+    """Decode-cache specs. Leading dim of each leaf is the stacked layer
+    (or shared-application) dim; dim 1 is batch."""
+    ax = mesh_axes(mesh)
+    tp = "model"
+    tp_size = _axis_size(mesh, tp)
+    dp_total = int(np.prod([_axis_size(mesh, a) for a in ax.dp]))
+    dp = ax.dp_spec
+    batch_shardable = batch % dp_total == 0 and batch >= dp_total
+    hd = cfg.resolved_head_dim
+
+    def f(path, leaf):
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        if nd == 0:  # pos scalar
+            return P()
+        b_ax = dp if batch_shardable else None
+        if name.endswith(("k", "v")) and nd == 5:  # (L, B, Sc, KV, hd)
+            # Prefer sequence-sharding over the model axis: the decode
+            # attention then computes per-shard partial softmax (tiny
+            # collectives) instead of all-reducing hd-contracted scores
+            # (which SPMD handled with an involuntary full-remat copy).
+            if leaf.shape[2] % tp_size == 0:
+                seq_done = tp
+                return P(None, b_ax, seq_done, None, None)
+            if hd % tp_size == 0:
+                seq_ax = None if batch_shardable else dp
+                if seq_ax is not None and leaf.shape[2] % dp_total:
+                    seq_ax = None
+                return P(None, b_ax, seq_ax, None, tp)
+            return P(None, b_ax, None, None, None)
+        if name.endswith("ckv"):  # (L, B, S, lora)
+            return P(None, b_ax, None if batch_shardable else dp, tp)
+        if name.endswith("kpe"):  # (L, B, S, rope)
+            return P(None, b_ax, None if batch_shardable else dp, None)
+        if name.endswith("conv"):  # (L, B, K-1, conv_dim)
+            return P(None, b_ax, None, tp)
+        if name.endswith("ssm"):  # (L, B, H, P, N)
+            return P(None, b_ax, tp, None, None)
+        if name.endswith(("x_tm", "x_cm")):  # (L, B, D)
+            return P(None, b_ax, tp)
+        if name.endswith("wkv"):  # (L, B, H, N, N)
+            return P(None, b_ax, tp, None, None)
+        return P(*((None,) * nd))
+
+    return jax.tree_util.tree_map_with_path(f, cache_shape)
+
+
+def token_decode_spec(cfg: ModelConfig, batch: int, mesh: Mesh):
+    ax = mesh_axes(mesh)
+    dp_total = int(np.prod([_axis_size(mesh, a) for a in ax.dp]))
+    b_ax = ax.dp_spec if batch % dp_total == 0 and batch >= dp_total else None
+    if cfg.num_codebooks:
+        return P(b_ax, None)
+    return P(b_ax)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

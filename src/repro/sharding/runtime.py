@@ -1,0 +1,44 @@
+"""Process-global mesh registry for modules that need explicit shard_map
+(currently the MoE dispatch, where GSPMD replicates the scatter operands).
+
+Launchers (dryrun/train/serve) call ``set_mesh_info(mesh)`` before building
+the step function; model code queries ``get_mesh_info()`` and falls back to
+the mesh-free path when None (single-device tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshInfo:
+    mesh: Mesh
+    dp_axes: tuple[str, ...]   # ("data",) or ("pod", "data")
+    tp_axis: str = "model"
+
+    @property
+    def dp_spec(self):
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+
+_CURRENT: Optional[MeshInfo] = None
+
+
+def set_mesh_info(mesh: Optional[Mesh]) -> None:
+    global _CURRENT
+    if mesh is None:
+        _CURRENT = None
+        return
+    dp = (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+    _CURRENT = MeshInfo(mesh, dp)
+
+
+def get_mesh_info() -> Optional[MeshInfo]:
+    return _CURRENT

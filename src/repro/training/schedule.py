@@ -1,0 +1,30 @@
+"""Learning-rate schedules (callables of step, fp32 in / fp32 out)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_with_warmup(peak: float, warmup_steps: int, total_steps: int,
+                       final_frac: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak * step / max(1, warmup_steps)
+        progress = jnp.clip((step - warmup_steps) /
+                            max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = final_frac * peak + (1 - final_frac) * peak * 0.5 * (
+            1 + jnp.cos(jnp.pi * progress))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return f
+
+
+def linear_decay(peak: float, total_steps: int):
+    def f(step):
+        frac = jnp.clip(1.0 - step / max(1, total_steps), 0.0, 1.0)
+        return jnp.asarray(peak * frac, jnp.float32)
+
+    return f

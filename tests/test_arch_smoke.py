@@ -1,0 +1,101 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train step
+on CPU, assert output shapes and no NaNs. (Deliverable (f).)"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.shapes import make_batch
+from repro.models import transformer as tf
+from repro.training.optimizer import adam, global_norm
+from repro.training.train_step import make_train_step, init_train_state
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    expected = {
+        "rwkv6-1.6b": dict(n_layers=24, d_model=2048, d_ff=7168,
+                           vocab_size=65536),
+        "mistral-nemo-12b": dict(n_layers=40, d_model=5120, n_heads=32,
+                                 n_kv_heads=8, d_ff=14336, vocab_size=131072),
+        "nemotron-4-15b": dict(n_layers=32, d_model=6144, n_heads=48,
+                               n_kv_heads=8, d_ff=24576, vocab_size=256000),
+        "zamba2-1.2b": dict(n_layers=38, d_model=2048, n_heads=32,
+                            n_kv_heads=32, d_ff=8192, vocab_size=32000),
+        "mixtral-8x7b": dict(n_layers=32, d_model=4096, n_heads=32,
+                             n_kv_heads=8, d_ff=14336, vocab_size=32000),
+        "yi-6b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4,
+                      d_ff=11008, vocab_size=64000),
+        "qwen2-vl-7b": dict(n_layers=28, d_model=3584, n_heads=28,
+                            n_kv_heads=4, d_ff=18944, vocab_size=152064),
+        "musicgen-medium": dict(n_layers=48, d_model=1536, n_heads=24,
+                                n_kv_heads=24, d_ff=6144, vocab_size=2048),
+        "h2o-danube-3-4b": dict(n_layers=24, d_model=3840, n_heads=32,
+                                n_kv_heads=8, d_ff=10240, vocab_size=32000),
+        "deepseek-v2-236b": dict(n_layers=60, d_model=5120, n_heads=128,
+                                 n_kv_heads=128, vocab_size=102400),
+    }[arch]
+    for k, v in expected.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    # family-specific structure
+    if arch == "zamba2-1.2b":
+        assert cfg.mamba2 is not None and cfg.mamba2.d_state == 64
+        assert cfg.shared_attn_every == 6
+    if arch == "mixtral-8x7b":
+        assert cfg.moe.num_experts == 8 and cfg.moe.num_experts_per_tok == 2
+    if arch == "deepseek-v2-236b":
+        assert cfg.moe.num_experts == 160
+        assert cfg.moe.num_experts_per_tok == 6
+        assert cfg.moe.num_shared_experts == 2
+        assert cfg.mla.kv_lora_rank == 512
+    if arch == "rwkv6-1.6b":
+        assert cfg.rwkv6 is not None
+    if arch == "musicgen-medium":
+        assert cfg.num_codebooks == 4
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_config_is_reduced(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.n_layers <= 4
+    assert cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = tf.init_params(key, cfg)
+    b, s = 2, 48 if cfg.num_patch_positions else 32
+    batch = make_batch(cfg, key, b, s)
+    logits, aux = tf.forward(params, cfg, batch["tokens"],
+                             positions=batch.get("positions"),
+                             patch_embeds=batch.get("patch_embeds"))
+    if cfg.num_codebooks:
+        assert logits.shape == (b, cfg.num_codebooks, s, cfg.vocab_size)
+    else:
+        assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(jnp.asarray(aux)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = get_smoke_config(arch)
+    opt = adam(1e-3)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    b, s = 2, 48 if cfg.num_patch_positions else 32
+    batch = make_batch(cfg, jax.random.PRNGKey(1), b, s)
+    new_state, metrics = step_fn(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert metrics["grad_norm"] > 0
+    assert int(new_state.step) == 1
+    # params actually moved
+    delta = global_norm(jax.tree.map(lambda a, b_: a - b_,
+                                     new_state.params, state.params))
+    assert float(delta) > 0

@@ -1,0 +1,181 @@
+"""Unit tests for the numerical substrate: attention (fwd + custom VJP),
+SSD chunked scan, WKV6 chunked form, MoE dispatch, RoPE/M-RoPE."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (naive_attention, flash_attention_jnp,
+                                    decode_attention)
+from repro.models.config import Mamba2Config, MoEConfig
+from repro.models.layers import rope_cos_sin, mrope_cos_sin, apply_rope
+from repro.models.mamba2 import ssd_chunked
+from repro.models.moe import init_moe, apply_moe
+from repro.models.rwkv6 import wkv6_chunked, wkv6_recurrent
+
+
+# ---------------------------------------------------------------- attention
+@pytest.mark.parametrize("window", [0, 32])
+def test_flash_jnp_matches_naive(window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 32))
+    k = jax.random.normal(ks[1], (2, 128, 2, 32))
+    v = jax.random.normal(ks[2], (2, 128, 2, 32))
+    ref = naive_attention(q, k, v, causal=True, window=window)
+    out = flash_attention_jnp(q, k, v, causal=True, window=window,
+                              q_block=32, k_block=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("window", [0, 32])
+def test_flash_custom_vjp_grads(window):
+    """The hand-written flash backward vs autodiff through naive attention."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 96, 4, 16))
+    k = jax.random.normal(ks[1], (2, 96, 2, 16))
+    v = jax.random.normal(ks[2], (2, 96, 2, 24))
+
+    def loss_flash(q, k, v):
+        o = flash_attention_jnp(q, k, v, causal=True, window=window,
+                                q_block=32, k_block=32)
+        return jnp.sum(jnp.sin(o))
+
+    def loss_naive(q, k, v):
+        return jnp.sum(jnp.sin(naive_attention(q, k, v, causal=True,
+                                               window=window)))
+
+    g1 = jax.grad(loss_naive, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_flash, (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5,
+                                   rtol=1e-3)
+
+
+def test_decode_attention_matches_last_row():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    S = 64
+    q_full = jax.random.normal(ks[0], (2, S, 4, 16))
+    k = jax.random.normal(ks[1], (2, S, 2, 16))
+    v = jax.random.normal(ks[2], (2, S, 2, 16))
+    full = naive_attention(q_full, k, v, causal=True)
+    valid = jnp.ones((2, S), bool)
+    dec = decode_attention(q_full[:, -1:], k, v, valid)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, -1]), atol=2e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------- SSD
+def test_ssd_chunked_matches_recurrence():
+    mc = Mamba2Config(d_state=8, chunk_size=16)
+    B, S, H, P, G, N = 2, 96, 4, 8, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    xs = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+
+    hg = H // G
+    Bh, Ch = jnp.repeat(Bm, hg, 2), jnp.repeat(Cm, hg, 2)
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp
+        new = state * jnp.exp(dt_t * A)[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", x_t * dt_t[..., None], b_t)
+        return new, jnp.einsum("bhpn,bhn->bhp", new, c_t)
+
+    init = jnp.zeros((B, H, P, N))
+    fin_ref, ys_ref = jax.lax.scan(
+        step, init, (xs.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+                     Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3)))
+    y, fin = ssd_chunked(xs, dt, A, Bm, Cm, mc)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ys_ref.transpose(1, 0, 2, 3)),
+                               atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(fin_ref),
+                               atol=2e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------- WKV6
+def test_wkv6_chunked_matches_recurrence_with_state():
+    ks = jax.random.split(jax.random.PRNGKey(4), 6)
+    B, S, H, N = 2, 80, 3, 16
+    r, k, v = (jax.random.normal(ks[i], (B, S, H, N)) for i in range(3))
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, N)))
+    u = 0.5 * jax.random.normal(ks[4], (H, N))
+    init = 0.3 * jax.random.normal(ks[5], (B, H, N, N))
+    o_ref, s_ref = wkv6_recurrent(r, k, v, lw, u, init)
+    o, s = wkv6_chunked(r, k, v, lw, u, init, chunk=32, tile=16)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=5e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), atol=5e-4,
+                               rtol=1e-3)
+
+
+# ---------------------------------------------------------------- MoE
+def test_moe_dropless_equals_dense_computation():
+    """With capacity = T the dispatch must not drop; verify vs explicit
+    per-token expert mixture."""
+    moe = MoEConfig(num_experts=4, num_experts_per_tok=2, expert_d_ff=32,
+                    capacity_factor=4.0 / 2)
+    d = 16
+    params = init_moe(jax.random.PRNGKey(5), d, moe, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 8, d))
+    y, aux = apply_moe(params, x, moe, capacity_factor=2.0)
+
+    # explicit dense reference
+    xf = x.reshape(-1, d)
+    logits = xf @ params["router"].astype(x.dtype)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    w8, i8 = jax.lax.top_k(probs, 2)
+    w8 = w8 / w8.sum(-1, keepdims=True)
+    outs = []
+    for e in range(4):
+        h = jax.nn.silu(xf @ params["experts"]["w_gate"][e]) * (
+            xf @ params["experts"]["w_up"][e])
+        outs.append(h @ params["experts"]["w_down"][e])
+    outs = jnp.stack(outs, 1)  # (T, E, D)
+    ref = jnp.einsum("tk,tkd->td", w8,
+                     jnp.take_along_axis(outs, i8[..., None], 1))
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, d)),
+                               np.asarray(ref), atol=1e-4, rtol=1e-3)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    """With a tiny capacity factor some tokens must be dropped (output 0
+    contribution) — verifies the dropping path doesn't corrupt others."""
+    moe = MoEConfig(num_experts=2, num_experts_per_tok=1, expert_d_ff=8,
+                    capacity_factor=0.5)
+    d = 4
+    params = init_moe(jax.random.PRNGKey(7), d, moe, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(8), (1, 16, d))
+    y, _ = apply_moe(params, x, moe)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+# ---------------------------------------------------------------- RoPE
+def test_rope_preserves_norm():
+    pos = jnp.arange(16)
+    cos, sin = rope_cos_sin(pos, 32, 10000.0)
+    x = jax.random.normal(jax.random.PRNGKey(9), (1, 16, 2, 32))
+    y = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               rtol=1e-5)
+
+
+def test_mrope_equals_rope_for_equal_positions():
+    """When t==h==w (text tokens) M-RoPE must reduce to standard RoPE."""
+    pos = jnp.arange(16)
+    pos3 = jnp.broadcast_to(pos, (3, 2, 16))
+    cos1, sin1 = rope_cos_sin(pos, 32, 1e4)
+    cos3, sin3 = mrope_cos_sin(pos3, 32, 1e4, (4, 6, 6))
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, 16, 2, 32))
+    y1 = apply_rope(x, cos1, sin1)
+    y3 = apply_rope(x, cos3, sin3)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y3), atol=1e-6)

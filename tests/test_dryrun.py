@@ -1,0 +1,34 @@
+"""Integration test of the multi-pod dry-run machinery itself.
+
+Runs one real (arch × shape × mesh) combination in a subprocess (the
+XLA_FLAGS device-count override must precede jax init, so it cannot run
+in-process with the rest of the suite)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("rwkv6-1.6b", "decode_32k"),
+    ("yi-6b", "train_4k"),
+])
+def test_dryrun_single_combo(arch, shape, tmp_path):
+    out = tmp_path / "rec.jsonl"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--out", str(out)],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout
+    rec = json.loads(out.read_text().strip().splitlines()[0])
+    assert rec["arch"] == arch and rec["shape"] == shape
+    assert rec["n_devices"] == 256
+    assert rec["flops"] > 0
+    assert rec["memory"]["temp_bytes"] > 0
+    assert rec["collectives"]["total"] > 0

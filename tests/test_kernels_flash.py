@@ -1,0 +1,66 @@
+"""Pallas flash-attention kernel vs pure-jnp oracle: shape/dtype/window
+sweep in interpret mode (per-kernel allclose deliverable)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ref import flash_attention_ref
+
+
+@pytest.mark.parametrize("b,s,h,kv,d", [
+    (1, 128, 4, 4, 32),    # MHA
+    (2, 256, 8, 2, 64),    # GQA 4x
+    (1, 128, 4, 1, 64),    # MQA
+    (2, 64, 2, 2, 128),    # large head_dim
+])
+@pytest.mark.parametrize("window", [0, 64])
+def test_flash_matches_ref(b, s, h, kv, d, window):
+    ks = jax.random.split(jax.random.PRNGKey(b * s + window), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    out = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 q_blk=64, kv_blk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 32)).astype(dtype)
+    k = jax.random.normal(ks[1], (2, 128, 2, 32)).astype(dtype)
+    v = jax.random.normal(ks[2], (2, 128, 2, 32)).astype(dtype)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    out = flash_attention_pallas(q, k, v, causal=True, q_blk=64, kv_blk=64)
+    assert out.dtype == dtype
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_flash_dk_neq_dv():
+    """MLA-style: key dim 48, value dim 32."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 48))
+    k = jax.random.normal(ks[1], (2, 128, 4, 48))
+    v = jax.random.normal(ks[2], (2, 128, 4, 32))
+    ref = flash_attention_ref(q, k, v, causal=True)
+    out = flash_attention_pallas(q, k, v, causal=True, q_blk=64, kv_blk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
+                               rtol=1e-4)
+
+
+def test_flash_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    ref = flash_attention_ref(q, k, v, causal=False)
+    out = flash_attention_pallas(q, k, v, causal=False, q_blk=64, kv_blk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
+                               rtol=1e-4)

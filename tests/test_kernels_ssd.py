@@ -1,0 +1,68 @@
+"""Pallas SSD kernel vs exact recurrence + the jnp chunked path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd import ssd_pallas
+from repro.models.config import Mamba2Config
+from repro.models.mamba2 import ssd_chunked
+
+
+def _ref_recurrence(xs, dt, A, Bm, Cm, d_skip):
+    b, s, h, p = xs.shape
+    g = Bm.shape[2]
+    hg = h // g
+    Bh, Ch = jnp.repeat(Bm, hg, 2), jnp.repeat(Cm, hg, 2)
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp
+        new = state * jnp.exp(dt_t * A)[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", x_t * dt_t[..., None], b_t)
+        y = jnp.einsum("bhpn,bhn->bhp", new, c_t)
+        return new, y
+
+    init = jnp.zeros((b, h, p, Bm.shape[3]))
+    fin, ys = jax.lax.scan(
+        step, init, (xs.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+                     Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3) + xs * d_skip[None, None, :, None]
+    return y, fin
+
+
+@pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
+    (1, 64, 2, 8, 1, 8, 16),
+    (2, 96, 4, 16, 2, 8, 32),
+    (1, 100, 2, 8, 1, 8, 16),  # non-multiple S
+])
+def test_ssd_pallas_matches_recurrence(b, s, h, p, g, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(s + chunk), 5)
+    xs = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    Bm = jax.random.normal(ks[3], (b, s, g, n))
+    Cm = jax.random.normal(ks[4], (b, s, g, n))
+    d_skip = jnp.linspace(0.5, 1.5, h)
+    y_ref, s_ref = _ref_recurrence(xs, dt, A, Bm, Cm, d_skip)
+    y, s_fin = ssd_pallas(xs, dt, A, Bm, Cm, d_skip, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=3e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_fin), np.asarray(s_ref),
+                               atol=3e-4, rtol=1e-3)
+
+
+def test_ssd_pallas_matches_jnp_chunked():
+    mc = Mamba2Config(d_state=8, chunk_size=32)
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    b, s, h, p, g, n = 2, 64, 4, 8, 2, 8
+    xs = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    Bm = jax.random.normal(ks[3], (b, s, g, n))
+    Cm = jax.random.normal(ks[4], (b, s, g, n))
+    y_jnp, s_jnp = ssd_chunked(xs, dt, A, Bm, Cm, mc)
+    y_pal, s_pal = ssd_pallas(xs, dt, A, Bm, Cm, jnp.zeros((h,)), chunk=32)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_jnp),
+                               atol=3e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_pal), np.asarray(s_jnp),
+                               atol=3e-4, rtol=1e-3)

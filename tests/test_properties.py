@@ -1,0 +1,114 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.replay import PrioritizedReplayBuffer, PlanBuffer
+from repro.env import latency_model as lm
+from repro.env.edge_cloud import EdgeCloudEnv, EnvConfig
+from repro.env.scenarios import SCENARIOS, CONSTRAINTS
+from repro.models.layers import rope_cos_sin, apply_rope
+from repro.models.rwkv6 import wkv6_chunked, wkv6_recurrent
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.lists(st.integers(0, lm.N_ACTIONS - 1), min_size=1, max_size=8),
+       st.booleans())
+def test_response_times_positive_and_bounded(actions, weak_e):
+    a = np.asarray(actions)
+    weak_s = np.zeros(len(a), bool)
+    t = lm.response_times(a, weak_s, weak_e)
+    assert np.all(t > 0)
+    # worst case: everyone on one node × n + weak penalties
+    bound = max(lm.T_LOCAL.max(), lm.T_CLOUD_D0 * len(a)) + 200
+    assert np.all(t <= bound)
+
+
+@given(st.integers(0, 7))
+def test_accuracy_matches_table3(model_idx):
+    acc = lm.action_accuracy(np.array([model_idx]))
+    assert acc[0] == lm.ACCURACY[model_idx]
+
+
+@given(st.integers(2, 5), st.integers(0, 10_000))
+def test_env_episode_always_terminates_in_n_steps(n_users, seed):
+    env = EdgeCloudEnv(EnvConfig(SCENARIOS["B"], CONSTRAINTS["85%"],
+                                 n_users=n_users, seed=seed))
+    env.reset()
+    rng = np.random.default_rng(seed)
+    done = False
+    for i in range(n_users):
+        _, _, done, _ = env.step(int(rng.integers(lm.N_ACTIONS)))
+    assert done
+
+
+@given(st.integers(2, 5), st.integers(0, 1000))
+def test_env_observation_in_unit_box(n_users, seed):
+    env = EdgeCloudEnv(EnvConfig(SCENARIOS["D"], CONSTRAINTS["80%"],
+                                 n_users=n_users, seed=seed))
+    obs = env.reset()
+    rng = np.random.default_rng(seed)
+    for _ in range(7):
+        assert obs.shape == (env.state_dim,)
+        assert np.all(obs >= -1e-6) and np.all(obs <= 1 + 1e-6)
+        obs, _, _, _ = env.step(int(rng.integers(lm.N_ACTIONS)))
+
+
+@given(st.integers(1, 200))
+def test_prioritized_buffer_sampling_valid(n_adds):
+    buf = PrioritizedReplayBuffer(64, 4, seed=0)
+    rng = np.random.default_rng(0)
+    for i in range(n_adds):
+        buf.add(rng.random(4).astype(np.float32), i % 10, 0.5,
+                rng.random(4).astype(np.float32), i % 3 == 0)
+    assert len(buf) == min(n_adds, 64)
+    batch, idx, w = buf.sample(16)
+    assert np.all(idx < len(buf))
+    assert np.all(w > 0) and np.all(w <= 1.0 + 1e-6)
+    buf.update_priorities(idx, rng.random(16))
+    assert np.all(buf.prio[:len(buf)] >= 0)
+
+
+@given(st.integers(1, 60))
+def test_plan_buffer_dedupe(n_adds):
+    buf = PlanBuffer(32, 2, seed=0)
+    rng = np.random.default_rng(1)
+    for i in range(n_adds):
+        key = (i % 5,)
+        a = i % 3
+        buf.add_keyed(key, rng.random(2).astype(np.float32), a, 1.0,
+                      rng.random(2).astype(np.float32), False)
+        assert buf.contains(key, a)
+    # distinct (key, action) pairs ≤ 15, so the buffer never exceeds that
+    assert len(buf._index) <= 15
+
+
+@given(st.integers(1, 64), st.integers(8, 64))
+def test_rope_norm_invariance(seq, dim_half):
+    dim = 2 * (dim_half // 2)
+    if dim < 4:
+        dim = 4
+    pos = jnp.arange(seq)
+    cos, sin = rope_cos_sin(pos, dim, 10000.0)
+    x = jax.random.normal(jax.random.PRNGKey(seq * dim), (1, seq, 1, dim))
+    y = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(x, axis=-1)),
+        np.asarray(jnp.linalg.norm(y, axis=-1)), rtol=2e-5)
+
+
+@given(st.floats(0.05, 4.0), st.integers(0, 100))
+def test_wkv6_chunked_equals_recurrent_any_decay(decay_scale, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    B, S, H, N = 1, 48, 2, 8
+    r, k, v = (jax.random.normal(ks[i], (B, S, H, N)) for i in range(3))
+    lw = -decay_scale * jnp.exp(jax.random.normal(ks[3], (B, S, H, N)))
+    u = 0.3 * jax.random.normal(ks[4], (H, N))
+    o1, s1 = wkv6_recurrent(r, k, v, lw, u)
+    o2, s2 = wkv6_chunked(r, k, v, lw, u, chunk=16, tile=8)
+    assert bool(jnp.all(jnp.isfinite(o2)))
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-3,
+                               rtol=5e-3)

@@ -1,0 +1,193 @@
+"""Substrate units: optimizer, schedules, data pipeline, checkpoint,
+serving engine, analytic flops, sharding policy (pure logic)."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import save, restore, restore_like
+from repro.configs import get_config, get_smoke_config, ARCH_IDS
+from repro.configs.shapes import SHAPES, input_specs, shape_applicable
+from repro.data.pipeline import SyntheticLM, batch_for_config, host_batches
+from repro.models import transformer as tf
+from repro.models.flops import model_flops
+from repro.serving.engine import generate, make_serve_step
+from repro.training import schedule
+from repro.training.optimizer import (adam, adamw, sgd, apply_updates,
+                                      clip_by_global_norm, global_norm)
+from repro.training.train_step import (make_train_step, init_train_state,
+                                       cross_entropy)
+
+
+# ------------------------------------------------------------- optimizer
+def test_adam_converges_quadratic():
+    opt = adam(0.1)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_decays_weights():
+    opt = adamw(lr=0.1, weight_decay=0.5)
+    params = {"w": jnp.array([1.0])}
+    state = opt.init(params)
+    updates, state = opt.update({"w": jnp.array([0.0])}, state, params)
+    new = apply_updates(params, updates)
+    assert float(new["w"][0]) < 1.0
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.ones((4,)) * 10}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_lr_schedules():
+    f = schedule.cosine_with_warmup(1.0, 10, 100)
+    assert float(f(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(f(jnp.asarray(10))) == pytest.approx(1.0, rel=1e-2)
+    assert float(f(jnp.asarray(100))) == pytest.approx(0.1, rel=1e-2)
+    g = schedule.linear_decay(2.0, 10)
+    assert float(g(jnp.asarray(5))) == pytest.approx(1.0)
+
+
+def test_cross_entropy_matches_uniform():
+    v = 16
+    logits = jnp.zeros((2, 3, v))
+    labels = jnp.zeros((2, 3), jnp.int32)
+    assert float(cross_entropy(logits, labels)) == pytest.approx(
+        np.log(v), rel=1e-5)
+
+
+def test_grad_accum_matches_full_batch():
+    cfg = get_smoke_config("yi-6b")
+    opt = adam(1e-2)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    batch = batch_for_config(cfg, 0, 4, 16)
+    s1, m1 = jax.jit(make_train_step(cfg, opt, remat=False))(state, batch)
+    s2, m2 = jax.jit(make_train_step(cfg, opt, remat=False,
+                                     grad_accum=2))(state, batch)
+    assert float(m1["ce"]) == pytest.approx(float(m2["ce"]), rel=1e-5)
+    d = global_norm(jax.tree.map(lambda a, b: a - b, s1.params, s2.params))
+    assert float(d) < 5e-3
+
+
+# ------------------------------------------------------------- data
+def test_synthetic_lm_deterministic():
+    gen = SyntheticLM(vocab_size=64, seq_len=8, seed=3)
+    b1, b2 = gen.batch(5, 4), gen.batch(5, 4)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    assert b1["tokens"].shape == (4, 8)
+    # labels are next tokens
+    np.testing.assert_array_equal(np.asarray(b1["labels"][:, :-1]),
+                                  np.asarray(b1["tokens"][:, 1:]))
+
+
+def test_host_batches_partition_global_batch():
+    cfg = get_smoke_config("yi-6b")
+    full = list(host_batches(cfg, global_batch=8, seq_len=4, num_steps=1))
+    h0 = list(host_batches(cfg, global_batch=8, seq_len=4, num_steps=1,
+                           host_index=0, num_hosts=2))
+    h1 = list(host_batches(cfg, global_batch=8, seq_len=4, num_steps=1,
+                           host_index=1, num_hosts=2))
+    np.testing.assert_array_equal(
+        np.concatenate([h0[0]["tokens"], h1[0]["tokens"]]),
+        np.asarray(full[0]["tokens"]))
+
+
+# ------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip():
+    cfg = get_smoke_config("mixtral-8x7b")
+    opt = adam(1e-3)
+    state = init_train_state(jax.random.PRNGKey(1), cfg, opt)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "ckpt.msgpack")
+        save(path, state)
+        restored = restore_like(path, state)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_preserves_dtypes():
+    tree = {"a": jnp.ones((2,), jnp.bfloat16), "b": jnp.ones((3,), jnp.int32),
+            "c": (jnp.zeros((1,)), "meta", 7)}
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "x.msgpack")
+        save(path, tree)
+        r = restore(path)
+        assert r["a"].dtype == jnp.bfloat16
+        assert r["b"].dtype == jnp.int32
+        assert r["c"][1] == "meta" and r["c"][2] == 7
+
+
+# ------------------------------------------------------------- serving
+def test_generate_greedy_deterministic():
+    cfg = get_smoke_config("yi-6b")
+    params = tf.init_params(jax.random.PRNGKey(2), cfg)
+    prompt = {"tokens": jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0,
+                                           cfg.vocab_size)}
+    r1 = generate(params, cfg, prompt, steps=6)
+    r2 = generate(params, cfg, prompt, steps=6)
+    np.testing.assert_array_equal(np.asarray(r1.tokens),
+                                  np.asarray(r2.tokens))
+    assert r1.tokens.shape == (2, 6)
+
+
+def test_generate_musicgen_codebooks():
+    cfg = get_smoke_config("musicgen-medium")
+    params = tf.init_params(jax.random.PRNGKey(4), cfg)
+    prompt = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(5), (2, cfg.num_codebooks, 6), 0, cfg.vocab_size)}
+    res = generate(params, cfg, prompt, steps=4)
+    assert res.tokens.shape == (2, cfg.num_codebooks, 4)
+
+
+def test_serve_step_sampling_temperature():
+    cfg = get_smoke_config("yi-6b")
+    params = tf.init_params(jax.random.PRNGKey(6), cfg)
+    _, cache = tf.prefill(params, cfg,
+                          jnp.zeros((1, 4), jnp.int32), max_len=16)
+    step = make_serve_step(cfg, sample="categorical", temperature=1.0)
+    tok = jnp.zeros((1,), jnp.int32)
+    t1, _, _ = step(params, tok, cache, jax.random.PRNGKey(0))
+    assert t1.shape == (1,)
+
+
+# ------------------------------------------------------------- shapes/flops
+def test_input_specs_cover_all_shapes():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for name in SHAPES:
+            if not shape_applicable(cfg, name):
+                assert name == "long_500k" and not cfg.subquadratic
+                continue
+            specs = input_specs(cfg, name)
+            assert specs, (arch, name)
+
+
+def test_model_flops_scaling():
+    cfg = get_config("yi-6b")
+    f_train = model_flops(cfg, "train_4k")
+    f_decode = model_flops(cfg, "decode_32k")
+    assert f_train > f_decode * 100
+    # 6·N·D dominates: train flops ≈ 6 × 6e9 params × 1e6 tokens
+    n = cfg.num_params()
+    assert f_train > 6 * n * 256 * 4096 * 0.9
+
+
+def test_moe_active_params_lower():
+    cfg = get_config("mixtral-8x7b")
+    assert cfg.active_params() < cfg.num_params() * 0.45
+    dsv = get_config("deepseek-v2-236b")
+    # deepseek-v2: ~236B total, ~21B active
+    assert 180e9 < dsv.num_params() < 280e9
+    assert dsv.active_params() < 40e9
