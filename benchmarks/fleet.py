@@ -1,0 +1,126 @@
+"""Fleet-scale simulation benchmark: jitted FleetEnv throughput + policy
+ART vs. the exact solver optimum across 1k random scenarios.
+
+    PYTHONPATH=src python -m benchmarks.fleet [--cells 1000] [--steps 200]
+                                              [--out BENCH_fleet.json]
+                                              [--params weights.npz]
+
+Measures:
+  * decisions/s through the jitted FleetEnv + DQN policy scan (the
+    acceptance floor is 1e5/s on CPU; the Python-loop EdgeCloudEnv manages
+    ~1e3/s, measured side by side for the speedup figure)
+  * mean greedy-policy ART / accuracy-violation rate over the random fleet
+    vs. the exact per-cell optimum from fleet.solver
+
+By default the DQN is freshly initialized (throughput is weight-agnostic);
+pass --params to score a trained policy (npz of w0,b0,w1,b1,...).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.networks import init_mlp_net
+from repro.env import latency_model as lm
+from repro.env.edge_cloud import EdgeCloudEnv, EnvConfig
+from repro.env.scenarios import SCENARIOS, CONSTRAINTS
+from repro.fleet import (FleetConfig, random_fleet, solve_optimal,
+                         make_greedy_evaluator, make_throughput_runner)
+
+
+def load_params(path: str | None, state_dim: int, hidden=(128, 128)):
+    if path is None:
+        return init_mlp_net(jax.random.PRNGKey(0),
+                            (state_dim, *hidden, lm.N_ACTIONS))
+    data = np.load(path)
+    n_layers = len([k for k in data.files if k.startswith("w")])
+    return [{"w": jnp.asarray(data[f"w{i}"]),
+             "b": jnp.asarray(data[f"b{i}"])} for i in range(n_layers)]
+
+
+def bench_python_env(n_steps: int = 2000) -> float:
+    """Decisions/s of the reference Python-loop environment."""
+    env = EdgeCloudEnv(EnvConfig(SCENARIOS["B"], CONSTRAINTS["85%"],
+                                 n_users=5, seed=0))
+    rng = np.random.default_rng(0)
+    env.reset()
+    t0 = time.perf_counter()
+    for _ in range(n_steps):
+        env.step(int(rng.integers(lm.N_ACTIONS)))
+    return n_steps / (time.perf_counter() - t0)
+
+
+def main(n_cells: int = 1000, n_steps: int = 200, n_max: int = 5,
+         params_path: str | None = None,
+         out: str = "BENCH_fleet.json") -> dict:
+    cfg = FleetConfig(n_max=n_max)
+    scn = random_fleet(jax.random.PRNGKey(1), n_cells, n_max=n_max)
+    params = load_params(params_path, cfg.state_dim)
+
+    # ---- throughput through the jitted fleet scan ----
+    run = make_throughput_runner(cfg, n_steps=n_steps)
+    key = jax.random.PRNGKey(2)
+    jax.block_until_ready(run(params, scn, key))  # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(run(params, scn, jax.random.PRNGKey(3)))
+    elapsed = time.perf_counter() - t0
+    decisions = n_cells * n_steps
+    fleet_rate = decisions / elapsed
+
+    py_rate = bench_python_env()
+
+    # ---- greedy ART vs. exact optimum over the same fleet ----
+    ev = make_greedy_evaluator(cfg)
+    info = jax.tree.map(np.asarray, ev(params, scn, jax.random.PRNGKey(4)))
+    t0 = time.perf_counter()
+    opt_art = np.array([solve_optimal(*scn.cell(i))["art"]
+                        for i in range(n_cells)])
+    solver_s = time.perf_counter() - t0
+    feasible = ~info["violated"]
+
+    result = {
+        "n_cells": n_cells,
+        "n_max": n_max,
+        "scan_steps": n_steps,
+        "decisions": decisions,
+        "elapsed_s": round(elapsed, 4),
+        "decisions_per_s": round(fleet_rate, 1),
+        "python_env_decisions_per_s": round(py_rate, 1),
+        "speedup_vs_python_env": round(fleet_rate / py_rate, 1),
+        "policy": "trained" if params_path else "random-init",
+        "mean_art_policy_ms": round(float(info["art"].mean()), 3),
+        "mean_art_optimal_ms": round(float(opt_art.mean()), 3),
+        "violation_rate": round(float(info["violated"].mean()), 4),
+        "mean_art_gap_feasible_ms": round(float(
+            (info["art"] - opt_art)[feasible].mean()), 3)
+        if feasible.any() else None,
+        "solver_scenarios_per_s": round(n_cells / solver_s, 1),
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"fleet: {fleet_rate:,.0f} decisions/s over {n_cells} cells "
+          f"({result['speedup_vs_python_env']}x the Python-loop env at "
+          f"{py_rate:,.0f}/s)")
+    print(f"policy ART {result['mean_art_policy_ms']} ms vs optimal "
+          f"{result['mean_art_optimal_ms']} ms, violation rate "
+          f"{result['violation_rate']}")
+    print(f"CSV,fleet_throughput,{elapsed / decisions * 1e6:.2f},"
+          f"decisions_per_s={fleet_rate:.0f}")
+    print(f"wrote {out}")
+    return result
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--cells", type=int, default=1000)
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--n-max", type=int, default=5)
+    p.add_argument("--params", default=None)
+    p.add_argument("--out", default="BENCH_fleet.json")
+    a = p.parse_args()
+    main(a.cells, a.steps, a.n_max, a.params, a.out)

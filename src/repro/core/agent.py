@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import time as _time
 from typing import Callable, Optional
 
 import jax
@@ -164,7 +165,6 @@ class HLAgent:
             self.d_world.add(obs, a, r, obs2, done)
             obs = obs2
         if len(self.d_direct) >= hp.batch:
-            import time as _time
             t0 = _time.perf_counter()
             batch, idx, w = self.d_direct.sample(hp.batch)
             self.dqn, _, td = self.dqn_update(
@@ -179,7 +179,6 @@ class HLAgent:
         hp = self.hp
         if len(self.d_world) < hp.batch:
             return
-        import time as _time
         t0 = _time.perf_counter()
         batch, _, _ = self.d_world.sample(hp.batch)
         self.sm, _ = self.sm_update(self.sm,
@@ -218,7 +217,6 @@ class HLAgent:
         hp = self.hp
         if len(self.d_plan) < hp.batch:
             return
-        import time as _time
         t0 = _time.perf_counter()
         batch, idx, w = self.d_plan.sample(hp.batch)
         self.dqn, _, td = self.dqn_update(

@@ -1,0 +1,24 @@
+"""Fleet-scale vectorized edge-cloud simulation.
+
+A pure-JAX, fully vectorized port of the round-based orchestration MDP in
+``repro.env``: thousands of independent cells × heterogeneous user counts
+are simulated in a single jitted ``lax.scan``.  Submodules:
+
+    latency   jax.numpy port of env.latency_model (vmap/jit-compatible)
+    env       functional FleetEnv: init/observe/step over stacked cell state
+    workload  Table-IV fleets, procedural random topologies, Poisson traces
+    solver    exact occupancy-count optimizer (replaces 10^n brute force)
+    evaluate  batched greedy-policy evaluation + throughput measurement
+"""
+from repro.fleet.workload import FleetScenario, from_table4, random_fleet
+from repro.fleet.env import FleetConfig, FleetState, make_fleet_env
+from repro.fleet.solver import solve_optimal
+from repro.fleet.evaluate import (make_greedy_evaluator,
+                                  make_throughput_runner)
+
+__all__ = [
+    "FleetScenario", "from_table4", "random_fleet",
+    "FleetConfig", "FleetState", "make_fleet_env",
+    "solve_optimal",
+    "make_greedy_evaluator", "make_throughput_runner",
+]

@@ -1,0 +1,210 @@
+"""Functional, fully vectorized FleetEnv.
+
+The numpy ``EdgeCloudEnv`` steps one user of one cell per Python call; this
+module steps *every cell of a fleet at once* inside jit.  All per-cell
+state — background flags, the partially-built action vector, charged
+reward, the PRNG key — lives in a ``FleetState`` of stacked arrays, so one
+``lax.scan`` over round positions simulates an entire fleet of rounds.
+
+Semantics match ``EdgeCloudEnv`` exactly (test-enforced at n_max=5): the
+same Table-II observation layout, the same dense-shaping reward with
+terminal contention settlement and graded accuracy penalty, and auto-reset
+on round completion (fresh background, cleared actions).  Cells with fewer
+than ``n_max`` users simply complete (and reset) earlier, so every cell
+issues one orchestration decision per step — heterogeneous fleets keep the
+accelerator fully busy.
+
+API (all functions returned by ``make_fleet_env`` are pure and jitted):
+
+    env = make_fleet_env(FleetConfig(n_max=5))
+    state = env.init(key, scenario)            # scenario: FleetScenario
+    obs = env.observe(scenario, state)         # (C, 4*n_max+8) float32
+    state, obs, reward, done, info = env.step(scenario, state, actions)
+
+The scenario is an *argument*, not a closure constant, so the same jitted
+step serves any fleet of the same (C, n_max) shape.  User-count swaps (for
+Poisson trace replay) are only well-defined at round boundaries: call
+``reset_rounds`` before stepping under a new ``n_users`` vector, otherwise
+a cell mid-round would settle its reward against the wrong round total.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.env.edge_cloud import (PENALTY_BASE, PENALTY_PER_PCT,
+                                  REWARD_SCALE)
+from repro.fleet import latency
+from repro.fleet.workload import FleetScenario
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    n_max: int = 5
+    bg_busy_prob: float = 0.1
+    quiet: bool = False  # disable background fluctuations (for eval)
+
+    @property
+    def state_dim(self) -> int:
+        return 4 * self.n_max + 8
+
+
+class FleetBackground(NamedTuple):
+    busy_p_s: jnp.ndarray  # (C, n_max) bool
+    busy_m_s: jnp.ndarray  # (C, n_max) bool
+    busy_m_e: jnp.ndarray  # (C,) bool
+    busy_m_c: jnp.ndarray  # (C,) bool
+    bg_edge: jnp.ndarray   # (C,) int32
+    bg_cloud: jnp.ndarray  # (C,) int32
+
+
+class FleetState(NamedTuple):
+    key: jnp.ndarray       # PRNG key for background resampling
+    actions: jnp.ndarray   # (C, n_max) int32, -1 = undecided
+    user: jnp.ndarray      # (C,) int32 — requesting-user cursor
+    charged: jnp.ndarray   # (C,) float32 — dense reward charged so far
+    bg: FleetBackground
+
+
+class FleetEnvFns(NamedTuple):
+    init: callable
+    observe: callable
+    step: callable
+    reset_rounds: callable
+
+
+def make_fleet_env(cfg: FleetConfig) -> FleetEnvFns:
+    n_max = cfg.n_max
+
+    def sample_background(key, n_cells: int) -> FleetBackground:
+        if cfg.quiet:
+            zc = jnp.zeros((n_cells, n_max), bool)
+            z = jnp.zeros((n_cells,), bool)
+            zi = jnp.zeros((n_cells,), jnp.int32)
+            return FleetBackground(zc, zc, z, z, zi, zi)
+        p = cfg.bg_busy_prob
+        ks = jax.random.split(key, 6)
+        u = lambda k, shape: jax.random.uniform(k, shape)
+        return FleetBackground(
+            u(ks[0], (n_cells, n_max)) < p,
+            u(ks[1], (n_cells, n_max)) < p,
+            u(ks[2], (n_cells,)) < p,
+            u(ks[3], (n_cells,)) < p,
+            (u(ks[4], (n_cells,)) < p / 2).astype(jnp.int32),
+            (u(ks[5], (n_cells,)) < p / 2).astype(jnp.int32),
+        )
+
+    def init(key, scenario: FleetScenario) -> FleetState:
+        n_cells = scenario.n_cells
+        key, sub = jax.random.split(key)
+        return FleetState(
+            key=key,
+            actions=jnp.full((n_cells, n_max), -1, jnp.int32),
+            user=jnp.zeros((n_cells,), jnp.int32),
+            charged=jnp.zeros((n_cells,), jnp.float32),
+            bg=sample_background(sub, n_cells),
+        )
+
+    def reset_rounds(state: FleetState) -> FleetState:
+        """Abort any in-flight rounds: clear actions/cursor/charged but keep
+        the PRNG key and background.  Required before swapping a scenario's
+        ``n_users`` (e.g. per Poisson-trace row) so no cell settles a round
+        against a user count it did not start with."""
+        return state._replace(
+            actions=jnp.full_like(state.actions, -1),
+            user=jnp.zeros_like(state.user),
+            charged=jnp.zeros_like(state.charged))
+
+    def _round_times(scenario, state, actions):
+        """Per-slot response times under the partial assignment (undecided
+        slots run the d7 placeholder, exactly like the numpy env)."""
+        a_eff = jnp.where(actions >= 0, actions, latency.N_MODELS - 1)
+        return jax.vmap(latency.response_times)(
+            a_eff, scenario.weak_s, scenario.weak_e,
+            state.bg.busy_p_s, state.bg.busy_m_s,
+            state.bg.busy_m_e, state.bg.busy_m_c,
+            state.bg.bg_edge, state.bg.bg_cloud,
+            scenario.user_mask())
+
+    def observe(scenario: FleetScenario, state: FleetState) -> jnp.ndarray:
+        n = scenario.n_users.astype(jnp.float32)
+        mask = scenario.user_mask()
+        k_edge = ((state.actions == latency.A_EDGE) & mask).sum(-1) \
+            + state.bg.bg_edge
+        k_cloud = ((state.actions == latency.A_CLOUD) & mask).sum(-1) \
+            + state.bg.bg_cloud
+        user_onehot = jax.nn.one_hot(state.user, n_max)
+        decided = (state.actions >= 0) & mask
+        acc_sum = (latency.action_accuracy(jnp.maximum(state.actions, 0))
+                   * decided).sum(-1)
+        col = lambda x: x.astype(jnp.float32)[:, None]
+        weak_e = col(scenario.weak_e)
+        return jnp.concatenate([
+            user_onehot,
+            state.bg.busy_p_s.astype(jnp.float32),
+            state.bg.busy_m_s.astype(jnp.float32),
+            scenario.weak_s.astype(jnp.float32),
+            jnp.minimum(k_edge, 8)[:, None] / 8.0,
+            col(state.bg.busy_m_e), weak_e,
+            jnp.minimum(k_cloud, 8)[:, None] / 8.0,
+            col(state.bg.busy_m_c), weak_e,
+            acc_sum[:, None] / (100.0 * n[:, None]),
+            col(state.user) / n[:, None],
+        ], axis=-1).astype(jnp.float32)
+
+    def step(scenario: FleetScenario, state: FleetState, actions_in):
+        """One orchestration decision per cell. Returns
+        (state', obs', reward, done, info); done cells auto-reset and
+        report their round's art/acc/violated in ``info``."""
+        n_cells = scenario.n_cells
+        cell = jnp.arange(n_cells)
+        n = scenario.n_users
+        u = jnp.minimum(state.user, n_max - 1)
+        acts = state.actions.at[cell, u].set(actions_in.astype(jnp.int32))
+        mask = scenario.user_mask()
+
+        times = _round_times(scenario, state, acts)
+        t_i = times[cell, u]
+        charged = state.charged + t_i
+        user2 = state.user + 1
+        done = user2 >= n
+
+        nf = n.astype(jnp.float32)
+        total = (times * mask).sum(-1)
+        art = total / nf
+        acc = ((latency.action_accuracy(jnp.where(acts >= 0, acts, 0))
+                * mask).sum(-1) / nf)
+        violated = acc < scenario.constraint - 1e-9
+        settle = total - charged
+        penalty = jnp.where(
+            violated,
+            PENALTY_BASE + PENALTY_PER_PCT * (scenario.constraint - acc),
+            0.0)
+        r_dense = -t_i / (nf * REWARD_SCALE)
+        r_term = -(t_i + settle) / (nf * REWARD_SCALE) - penalty
+        reward = jnp.where(done, r_term, r_dense).astype(jnp.float32)
+
+        # auto-reset finished cells: fresh background, cleared round
+        key, sub = jax.random.split(state.key)
+        bg_new = sample_background(sub, n_cells)
+        pick = lambda new, old: jnp.where(
+            done.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
+        state2 = FleetState(
+            key=key,
+            actions=jnp.where(done[:, None], -1, acts),
+            user=jnp.where(done, 0, user2),
+            charged=jnp.where(done, 0.0, charged).astype(jnp.float32),
+            bg=jax.tree.map(pick, bg_new, state.bg),
+        )
+        info = {"art": art, "acc": acc, "violated": violated,
+                "t_ms": jnp.where(done, t_i + jnp.maximum(0.0, settle), t_i),
+                "actions": acts}
+        return state2, observe(scenario, state2), reward, done, info
+
+    return FleetEnvFns(init=jax.jit(init),
+                       observe=jax.jit(observe),
+                       step=jax.jit(step),
+                       reset_rounds=jax.jit(reset_rounds))

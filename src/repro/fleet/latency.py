@@ -1,0 +1,89 @@
+"""jax.numpy port of ``repro.env.latency_model`` — vmap/jit-compatible.
+
+Single source of truth: all constants (model pool, anchored times, weak /
+busy penalties) are imported from the numpy reference module; nothing is
+re-derived here.  The functions below reproduce the reference element for
+element (test-enforced to 1e-5 over randomized actions / backgrounds /
+weak-link patterns) while being traceable: every input, including the
+``weak_e`` / ``busy_m_e`` / ``busy_m_c`` scalars, may be a traced JAX value,
+so the whole thing can be ``vmap``-ed over a leading cell axis and stepped
+inside ``lax.scan``.
+
+One extension over the reference: an optional boolean ``mask`` marks which
+of the (padded, fixed-width) user slots are real.  Masked-out slots
+contribute neither contention nor response time, which is what lets one
+stacked array hold cells with heterogeneous user counts (2–32 users in the
+same fleet).  ``mask=None`` is exactly the reference semantics.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.env import latency_model as lm
+
+N_MODELS = lm.N_MODELS
+N_ACTIONS = lm.N_ACTIONS
+A_EDGE, A_CLOUD = lm.A_EDGE, lm.A_CLOUD
+
+
+def action_accuracy(actions: jnp.ndarray) -> jnp.ndarray:
+    """Per-request accuracy (%) for an action vector (any shape)."""
+    accuracy = jnp.asarray(lm.ACCURACY)
+    return jnp.where(actions < N_MODELS,
+                     accuracy[jnp.minimum(actions, N_MODELS - 1)],
+                     accuracy[0])
+
+
+def response_times(actions, weak_s, weak_e,
+                   busy_p_s=None, busy_m_s=None,
+                   busy_m_e=False, busy_m_c=False,
+                   bg_edge=0, bg_cloud=0, mask=None) -> jnp.ndarray:
+    """Response time (ms) per user slot for one round of requests.
+
+    actions: (n,) ints in [0, 10); weak_s: (n,) bool; weak_e: scalar bool;
+    busy_*: background flags ((n,) or scalar; None → quiet); bg_edge /
+    bg_cloud: background occupancy; mask: (n,) bool of real slots (None →
+    all real).  All arguments may be traced.
+    """
+    actions = jnp.asarray(actions)
+    n = actions.shape[-1]
+    if busy_p_s is None:
+        busy_p_s = jnp.zeros(n, bool)
+    if busy_m_s is None:
+        busy_m_s = jnp.zeros(n, bool)
+    if mask is None:
+        mask = jnp.ones(n, bool)
+    t_local = jnp.asarray(lm.T_LOCAL)
+
+    is_local = (actions < N_MODELS) & mask
+    is_edge = (actions == A_EDGE) & mask
+    is_cloud = (actions == A_CLOUD) & mask
+    k_edge = is_edge.sum(-1) + bg_edge
+    k_cloud = is_cloud.sum(-1) + bg_cloud
+
+    tl = t_local[jnp.minimum(actions, N_MODELS - 1)]
+    tl = tl * jnp.where(busy_p_s, lm.BUSY_CPU_LOCAL, 1.0)
+    tl = tl * jnp.where(busy_m_s, lm.BUSY_MEM, 1.0)
+    te = (lm.T_EDGE_D0 * jnp.maximum(1, k_edge)
+          * jnp.where(busy_m_e, lm.BUSY_MEM, 1.0)
+          + jnp.where(weak_e, lm.WEAK_E_EDGE, 0.0))
+    tc = (lm.T_CLOUD_D0 * jnp.maximum(1, k_cloud)
+          * jnp.where(busy_m_c, lm.BUSY_MEM, 1.0)
+          + jnp.where(weak_e, lm.WEAK_E_CLOUD, 0.0))
+
+    t = jnp.where(is_local, tl, 0.0)
+    t = jnp.where(is_edge, te, t)
+    t = jnp.where(is_cloud, tc, t)
+    t = t + jnp.where(weak_s & mask, lm.WEAK_S_PENALTY, 0.0)
+    return t
+
+
+def round_metrics(actions, weak_s, weak_e, mask=None, **bg):
+    """(average response time ms, average accuracy %) over the real slots."""
+    t = response_times(actions, weak_s, weak_e, mask=mask, **bg)
+    acc = action_accuracy(actions)
+    if mask is None:
+        return t.mean(-1), acc.mean(-1)
+    denom = jnp.maximum(1, mask.sum(-1))
+    return ((t * mask).sum(-1) / denom,
+            (acc * mask).sum(-1) / denom)

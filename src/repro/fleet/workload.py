@@ -1,0 +1,118 @@
+"""Fleet scenario / workload generation.
+
+A ``FleetScenario`` is the stacked, padded description of C independent
+cells: per-cell weak-link flags for up to ``n_max`` end nodes, a weak-edge
+flag, the real user count, and the accuracy constraint.  Three sources:
+
+    from_table4    the paper's four hand-written scenarios (Table IV),
+                   tiled over constraint levels — the replication fleet
+    random_fleet   procedural random topologies: per-cell weak-link
+                   probabilities, weak-edge flags, user counts 2–n_max,
+                   constraints drawn from the Table-V levels
+    poisson_round_trace
+                   open-loop traffic replay: per-round Poisson arrival
+                   counts that modulate each cell's active user count
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.env.scenarios import (SCENARIOS, CONSTRAINTS, CONSTRAINT_ORDER,
+                                 Scenario)
+
+
+class FleetScenario(NamedTuple):
+    """Stacked per-cell scenario arrays (leading axis = cell)."""
+    weak_s: jnp.ndarray      # (C, n_max) bool — per end-node weak link
+    weak_e: jnp.ndarray      # (C,) bool       — weak edge
+    n_users: jnp.ndarray     # (C,) int32      — real users (≤ n_max)
+    constraint: jnp.ndarray  # (C,) float32    — accuracy threshold (%)
+
+    @property
+    def n_cells(self) -> int:
+        return self.weak_e.shape[0]
+
+    @property
+    def n_max(self) -> int:
+        return self.weak_s.shape[1]
+
+    def user_mask(self) -> jnp.ndarray:
+        """(C, n_max) bool — which padded slots are real users."""
+        return jnp.arange(self.n_max)[None, :] < self.n_users[:, None]
+
+    def cell(self, i: int) -> tuple[Scenario, float, int]:
+        """Cell ``i`` as a (Scenario, constraint, n_users) triple for the
+        single-cell reference tools (brute force, exact solver)."""
+        n = int(self.n_users[i])
+        weak = tuple(bool(x) for x in np.asarray(self.weak_s[i])[:n])
+        # constraints are stored float32; snap back to the tenth-of-a-%
+        # grid of Table V so 89.9 does not round-trip to 89.90000153
+        return (Scenario(f"cell{i}", weak, bool(self.weak_e[i])),
+                round(float(self.constraint[i]), 4), n)
+
+
+def from_table4(names=("A", "B", "C", "D"), constraints=CONSTRAINT_ORDER,
+                n_users: int = 5, n_max: int | None = None) -> FleetScenario:
+    """Every (Table-IV scenario × constraint level) as one fleet cell."""
+    n_max = n_users if n_max is None else n_max
+    ws, we, nu, cs = [], [], [], []
+    for name in names:
+        sc = SCENARIOS[name].for_users(n_users)
+        row = np.zeros(n_max, bool)
+        row[:n_users] = sc.weak_s_arr()
+        for c in constraints:
+            ws.append(row)
+            we.append(sc.weak_e)
+            nu.append(n_users)
+            cs.append(CONSTRAINTS[c] if isinstance(c, str) else float(c))
+    return FleetScenario(jnp.asarray(np.stack(ws)),
+                         jnp.asarray(np.array(we)),
+                         jnp.asarray(np.array(nu, np.int32)),
+                         jnp.asarray(np.array(cs, np.float32)))
+
+
+def random_fleet(key, n_cells: int, n_max: int = 5, *,
+                 n_users_min: int = 2, n_users_max: int | None = None,
+                 weak_s_prob_max: float = 0.6, weak_e_prob: float = 0.3,
+                 constraint_pool=None) -> FleetScenario:
+    """Procedural random topologies beyond Table IV.
+
+    Each cell draws its own weak-link probability p ~ U(0, weak_s_prob_max)
+    (heterogeneous network quality across the fleet), Bernoulli weak-node
+    flags under that p, a weak-edge flag, a user count in
+    [n_users_min, n_users_max], and a constraint from the Table-V levels.
+    """
+    n_users_max = n_max if n_users_max is None else n_users_max
+    if constraint_pool is None:
+        constraint_pool = [CONSTRAINTS[c] for c in CONSTRAINT_ORDER]
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p_cell = jax.random.uniform(k1, (n_cells, 1)) * weak_s_prob_max
+    weak_s = jax.random.uniform(k2, (n_cells, n_max)) < p_cell
+    weak_e = jax.random.uniform(k3, (n_cells,)) < weak_e_prob
+    n_users = jax.random.randint(k4, (n_cells,), n_users_min,
+                                 n_users_max + 1, jnp.int32)
+    pool = jnp.asarray(np.array(constraint_pool, np.float32))
+    constraint = pool[jax.random.randint(k5, (n_cells,), 0, len(pool))]
+    # weak_s is sampled for every slot, including ones beyond the cell's
+    # current n_users: the env masks inactive slots itself, and keeping the
+    # flags means Poisson replay that raises n_users activates users whose
+    # link quality still follows the cell's weak-link probability.
+    return FleetScenario(weak_s, weak_e, n_users, constraint)
+
+
+def poisson_round_trace(key, scenario: FleetScenario, horizon: int,
+                        rate: float | jnp.ndarray = 3.0) -> jnp.ndarray:
+    """(horizon, C) per-round request-arrival counts for open-loop replay.
+
+    Counts are Poisson(rate) clipped to [1, n_max] (a round with zero
+    requests is skipped by the paper's round abstraction, so the floor is
+    one request).  Feed row ``t`` back as ``scenario._replace(n_users=...)``
+    to replay the trace through a jitted ``FleetEnv``.
+    """
+    counts = jax.random.poisson(key, rate,
+                                (horizon, scenario.n_cells)).astype(jnp.int32)
+    return jnp.clip(counts, 1, scenario.n_max)

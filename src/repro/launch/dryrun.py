@@ -43,6 +43,18 @@ COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                   "collective-permute")
 
 
+def _shape_bytes(dt: str, dims: str) -> int | None:
+    """Bytes of a `dtype[d0,d1,...]` HLO shape; None for unknown dtypes."""
+    nbytes = _DTYPE_BYTES.get(dt)
+    if nbytes is None:
+        return None
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
 def parse_collective_bytes(hlo_text: str) -> dict:
     """Sum operand bytes of every collective op in optimized HLO.
 
@@ -53,30 +65,33 @@ def parse_collective_bytes(hlo_text: str) -> dict:
     sizes: dict[str, int] = {}
     for m in shape_re.finditer(hlo_text):
         name, dt, dims = m.groups()
-        nbytes = _DTYPE_BYTES.get(dt)
-        if nbytes is None:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        sizes[name] = n * nbytes
+        nb = _shape_bytes(dt, dims)
+        if nb is not None:
+            sizes[name] = nb
 
     out = {k: 0 for k in COLLECTIVE_OPS}
     counts = {k: 0 for k in COLLECTIVE_OPS}
     line_re = re.compile(
         r"=\s*\(?[a-z0-9]+\[[\d,]*\][^=]*?\b(" + "|".join(COLLECTIVE_OPS)
         + r")(?:-start)?\(([^)]*)\)")
+    operand_shape_re = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
     for line in hlo_text.splitlines():
         m = line_re.search(line)
         if not m:
             continue
         kind, operands = m.groups()
         counts[kind] += 1
-        for op in operands.split(","):
-            op = op.strip().lstrip("%")
-            if op in sizes:
-                out[kind] += sizes[op]
+        # Optimized HLO types each operand inline (f32[8,128]{1,0} %name) —
+        # sum those shapes directly; fall back to the symbol table for
+        # untyped operand lists.
+        got = 0
+        for dt, dims in operand_shape_re.findall(operands):
+            got += _shape_bytes(dt, dims) or 0
+        if got == 0:
+            for op in operands.split(","):
+                op = op.strip().lstrip("%")
+                got += sizes.get(op, 0)
+        out[kind] += got
     out_total = sum(out.values())
     return {"bytes": out, "counts": counts, "total": out_total}
 
@@ -207,6 +222,10 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
         t_compile = time.time() - t0
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        # jax < 0.4.31 returns a one-element list of dicts; newer returns
+        # the dict directly.
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
         coll = parse_collective_bytes(compiled.as_text())
     rec = {
         "arch": arch,
