@@ -21,7 +21,6 @@ the quantity reported in Table VI.
 """
 from __future__ import annotations
 
-import copy
 import dataclasses
 import time as _time
 from typing import Callable, Optional
@@ -189,7 +188,7 @@ class HLAgent:
     def _planning_session(self):
         """Algorithm 1 lines 21–33."""
         hp = self.hp
-        plan_env = copy.deepcopy(self.env)  # independent request stream
+        plan_env = self.env.fork()  # independent request stream
         obs = plan_env.observe()
         for _ in range(hp.t_suggest):
             r_hat, s2_hat = self.sm_predict_all(self.sm.params,
@@ -205,7 +204,7 @@ class HLAgent:
             for a_i in suggested:
                 if self.d_plan.contains(key, a_i):
                     continue  # line 31–32: refreshed lazily on next add
-                fork = copy.deepcopy(plan_env)
+                fork = plan_env.fork()
                 obs2, r, done, _info = fork.step(int(a_i))
                 self.real_steps += 1  # planning verification = real request
                 self.exp_time_ms += _info.get("t_ms", 0.0)

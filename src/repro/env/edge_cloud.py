@@ -175,6 +175,28 @@ class EdgeCloudEnv:
         obs = self.reset()
         return obs, reward, True, info
 
+    def fork(self) -> "EdgeCloudEnv":
+        """Independent copy for planning forks (Algorithm 1's simulated
+        request streams): shares the immutable config/scenario, clones only
+        the dynamic round state and the exact RNG stream.  Replaces the
+        ``copy.deepcopy(env)`` the HL agent used, which re-copied the whole
+        config every planning step.  Callers must not toggle ``cfg.quiet``
+        (e.g. via ``rollout_greedy``) while a fork is live."""
+        new = object.__new__(EdgeCloudEnv)
+        new.cfg = self.cfg
+        new.n = self.n
+        new.n_actions = self.n_actions
+        new.state_dim = self.state_dim
+        rng = np.random.default_rng()
+        rng.bit_generator.state = self.rng.bit_generator.state
+        new.rng = rng
+        new.bg = {k: v.copy() if isinstance(v, np.ndarray) else v
+                  for k, v in self.bg.items()}
+        new.user = self.user
+        new.actions = self.actions.copy()
+        new._charged = self._charged
+        return new
+
     # ---------------- evaluation helpers ----------------
     def rollout_greedy(self, policy_fn):
         """One quiet round under argmax policy. Returns info dict."""

@@ -20,6 +20,7 @@ API (all functions returned by ``make_fleet_env`` are pure and jitted):
     state = env.init(key, scenario)            # scenario: FleetScenario
     obs = env.observe(scenario, state)         # (C, 4*n_max+8) float32
     state, obs, reward, done, info = env.step(scenario, state, actions)
+    state, traj = env.rollout(scenario, state, actions_TC)  # (T, C) scan
 
 The scenario is an *argument*, not a closure constant, so the same jitted
 step serves any fleet of the same (C, n_max) shape.  User-count swaps (for
@@ -46,6 +47,13 @@ class FleetConfig:
     n_max: int = 5
     bg_busy_prob: float = 0.1
     quiet: bool = False  # disable background fluctuations (for eval)
+    # Cross-cell contention (ROADMAP "multi-cell contention coupling",
+    # minimal version): when True the cloud tier is one shared pool — the
+    # cloud occupancy every cell sees is the *fleet-wide* sum of assigned
+    # cloud requests, so offloading in one cell raises cloud queueing
+    # latency in every other.  Off by default; with a single cell the
+    # coupling term is identically zero (parity test-enforced).
+    shared_cloud: bool = False
 
     @property
     def state_dim(self) -> int:
@@ -74,6 +82,7 @@ class FleetEnvFns(NamedTuple):
     observe: callable
     step: callable
     reset_rounds: callable
+    rollout: callable
 
 
 def make_fleet_env(cfg: FleetConfig) -> FleetEnvFns:
@@ -118,16 +127,25 @@ def make_fleet_env(cfg: FleetConfig) -> FleetEnvFns:
             user=jnp.zeros_like(state.user),
             charged=jnp.zeros_like(state.charged))
 
+    def _cloud_coupling(actions, mask):
+        """(C,) extra cloud occupancy each cell sees from *other* cells'
+        assigned cloud requests (zero unless cfg.shared_cloud)."""
+        own = ((actions == latency.A_CLOUD) & mask).sum(-1)
+        return own.sum() - own
+
     def _round_times(scenario, state, actions):
         """Per-slot response times under the partial assignment (undecided
         slots run the d7 placeholder, exactly like the numpy env)."""
         a_eff = jnp.where(actions >= 0, actions, latency.N_MODELS - 1)
+        mask = scenario.user_mask()
+        bg_cloud = state.bg.bg_cloud
+        if cfg.shared_cloud:
+            bg_cloud = bg_cloud + _cloud_coupling(a_eff, mask)
         return jax.vmap(latency.response_times)(
             a_eff, scenario.weak_s, scenario.weak_e,
             state.bg.busy_p_s, state.bg.busy_m_s,
             state.bg.busy_m_e, state.bg.busy_m_c,
-            state.bg.bg_edge, state.bg.bg_cloud,
-            scenario.user_mask())
+            state.bg.bg_edge, bg_cloud, mask)
 
     def observe(scenario: FleetScenario, state: FleetState) -> jnp.ndarray:
         n = scenario.n_users.astype(jnp.float32)
@@ -136,6 +154,8 @@ def make_fleet_env(cfg: FleetConfig) -> FleetEnvFns:
             + state.bg.bg_edge
         k_cloud = ((state.actions == latency.A_CLOUD) & mask).sum(-1) \
             + state.bg.bg_cloud
+        if cfg.shared_cloud:
+            k_cloud = k_cloud + _cloud_coupling(state.actions, mask)
         user_onehot = jax.nn.one_hot(state.user, n_max)
         decided = (state.actions >= 0) & mask
         acc_sum = (latency.action_accuracy(jnp.maximum(state.actions, 0))
@@ -204,7 +224,24 @@ def make_fleet_env(cfg: FleetConfig) -> FleetEnvFns:
                 "actions": acts}
         return state2, observe(scenario, state2), reward, done, info
 
+    def rollout(scenario: FleetScenario, state: FleetState, actions):
+        """Scan-friendly multi-step rollout: apply a (T, C) action sequence
+        in one ``lax.scan`` and return (state', trajectory) with every
+        per-step output stacked on a leading T axis — the primitive the
+        hltrain trainer, trace replay, and tests build on.
+
+        trajectory = {"obs": (T, C, D), "reward": (T, C), "done": (T, C),
+                      "art"/"acc"/"violated"/"t_ms"/"actions": per-step
+                      info arrays}.
+        """
+        def body(st, a_t):
+            st, obs, reward, done, info = step(scenario, st, a_t)
+            return st, dict(info, obs=obs, reward=reward, done=done)
+
+        return jax.lax.scan(body, state, actions)
+
     return FleetEnvFns(init=jax.jit(init),
                        observe=jax.jit(observe),
                        step=jax.jit(step),
-                       reset_rounds=jax.jit(reset_rounds))
+                       reset_rounds=jax.jit(reset_rounds),
+                       rollout=jax.jit(rollout))

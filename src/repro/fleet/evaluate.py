@@ -13,6 +13,8 @@ the 5-user environment (identical observation layout at ``n_max == 5``).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -24,8 +26,7 @@ from repro.fleet.workload import FleetScenario
 def make_greedy_evaluator(cfg: FleetConfig, apply_fn=apply_mlp_net):
     """Returns jitted ``evaluate(params, scenario, key) -> info`` running
     one quiet greedy round per cell; info arrays are (C,)."""
-    env = make_fleet_env(FleetConfig(cfg.n_max, cfg.bg_busy_prob,
-                                     quiet=True))
+    env = make_fleet_env(dataclasses.replace(cfg, quiet=True))
 
     @jax.jit
     def evaluate(params, scenario: FleetScenario, key):

@@ -12,6 +12,9 @@ flag, the real user count, and the accuracy constraint.  Three sources:
     poisson_round_trace
                    open-loop traffic replay: per-round Poisson arrival
                    counts that modulate each cell's active user count
+
+plus ``curriculum_fleets``, a per-stage sampler over ``random_fleet`` that
+grows user counts start → end for curriculum training.
 """
 from __future__ import annotations
 
@@ -102,6 +105,31 @@ def random_fleet(key, n_cells: int, n_max: int = 5, *,
     # flags means Poisson replay that raises n_users activates users whose
     # link quality still follows the cell's weak-link probability.
     return FleetScenario(weak_s, weak_e, n_users, constraint)
+
+
+def curriculum_fleets(key, n_cells: int, epochs: int, *, start: int = 2,
+                      end: int = 32, n_max: int | None = None,
+                      **random_fleet_kw) -> list[FleetScenario]:
+    """User-count curriculum (ROADMAP item 4, minimal version): one random
+    fleet per curriculum stage with the user-count ceiling growing linearly
+    start → end over ``epochs`` stages.
+
+    All stages share the same ``n_max`` (default: ``end``) so a single
+    jitted trainer — whose observation width is fixed by n_max — trains
+    across the whole curriculum without recompiling; only the ``n_users``
+    *values* grow.  Swap stages at round boundaries (the hltrain trainer's
+    ``resume`` does this via ``reset_rounds``).
+    """
+    n_max = end if n_max is None else n_max
+    stages = []
+    for e in range(epochs):
+        frac = e / max(1, epochs - 1)
+        cap = int(round(start + frac * (end - start)))
+        key, sub = jax.random.split(key)
+        stages.append(random_fleet(sub, n_cells, n_max=n_max,
+                                   n_users_min=min(start, cap),
+                                   n_users_max=cap, **random_fleet_kw))
+    return stages
 
 
 def poisson_round_trace(key, scenario: FleetScenario, horizon: int,

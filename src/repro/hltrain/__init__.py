@@ -1,0 +1,34 @@
+"""Fleet-scale Hybrid Learning: Algorithm 1 fully jitted over repro.fleet.
+
+Submodules:
+
+    buffers   functional replay / prioritized / plan buffers as JAX pytrees
+              (masked ring writes, Gumbel-top-k prioritized sampling,
+              hashed (s, a) novelty for the plan buffer)
+    trainer   the three HL phases as masked lax.scan over sessions with the
+              whole fleet stepped per decision; one DQN + system model
+              shared across cells
+    metrics   Table-VI real-step accounting and reward-vs-exact-optimum
+              evaluation against fleet.solver
+"""
+from repro.hltrain.buffers import (Ring, PrioRing, PlanRing, ring_init,
+                                   ring_add, ring_sample, prio_init,
+                                   prio_add, prio_sample, prio_update,
+                                   plan_init, plan_contains, plan_add,
+                                   hash_state_action)
+from repro.hltrain.trainer import (FleetHLParams, FleetHLTrainer,
+                                   HLTrainState, make_hl_trainer,
+                                   session_schedule)
+from repro.hltrain.metrics import (real_step_budget, optimal_rewards,
+                                   reward_from_round, evaluate_vs_solver,
+                                   history_to_dict)
+
+__all__ = [
+    "Ring", "PrioRing", "PlanRing", "ring_init", "ring_add", "ring_sample",
+    "prio_init", "prio_add", "prio_sample", "prio_update",
+    "plan_init", "plan_contains", "plan_add", "hash_state_action",
+    "FleetHLParams", "FleetHLTrainer", "HLTrainState", "make_hl_trainer",
+    "session_schedule",
+    "real_step_budget", "optimal_rewards", "reward_from_round",
+    "evaluate_vs_solver", "history_to_dict",
+]

@@ -1,0 +1,221 @@
+"""Functional fixed-capacity replay buffers as JAX pytrees.
+
+The Python trainers (``repro.core.replay``) keep numpy ring buffers on the
+host, so every transition crosses the host-device boundary twice per
+update.  Here the three Algorithm-1 buffers — D_direct (prioritized),
+D_world (uniform), D_plan (prioritized + (s, a) novelty) — are pytrees of
+device arrays, written with masked ring-index ``.at[]`` scatters and
+sampled inside jit, so an entire HL epoch (env steps, buffer traffic,
+gradient updates) compiles into one XLA program.
+
+Design points:
+
+  * **Batched ring writes.**  One fleet step produces C transitions; they
+    are written at consecutive ring slots in a single scatter.  A boolean
+    ``mask`` selects which rows actually land (inactive sessions, non-novel
+    plan entries); masked-out rows are routed to index ``capacity`` and
+    dropped by ``mode="drop"`` so the write stays shape-stable under jit.
+
+  * **Sum-tree-free prioritized sampling.**  With priorities p_i over the
+    written slots, a Gumbel-top-k over logits α·log p_i + G_i draws a
+    minibatch *without replacement* whose inclusion probabilities follow
+    Schaul et al.'s P(i) ∝ p_i^α (exact for k = 1, near-exact for
+    k ≪ size).  Importance weights w_i = (N·P(i))^−β use the same P(i),
+    normalized by the batch max.  No tree, no host sync, O(cap) per draw.
+
+  * **Hash-based novelty for D_plan.**  The Python ``PlanBuffer`` keys a
+    dict by the 3-decimal-rounded observation; observations here are
+    mostly discrete features (one-hots, flags, occupancy eighths), so exact
+    hash equality is the right membership test.  Keys are 32-bit mixes of
+    the quantized state and the action; a collision (≈ size/2³² per query)
+    only skips one verification request, which is harmless.
+
+All functions are pure: they return new buffer pytrees and never alias.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Ring(NamedTuple):
+    """Uniform ring buffer of (s, a, r, s', done) with write cursor."""
+    s: jnp.ndarray      # (cap, D) float32
+    a: jnp.ndarray      # (cap,)  int32
+    r: jnp.ndarray      # (cap,)  float32
+    s2: jnp.ndarray     # (cap, D) float32
+    done: jnp.ndarray   # (cap,)  float32
+    ptr: jnp.ndarray    # ()      int32 — next write slot
+    size: jnp.ndarray   # ()      int32 — slots written (≤ cap)
+
+    @property
+    def capacity(self) -> int:
+        return self.a.shape[0]
+
+
+class PrioRing(NamedTuple):
+    """Prioritized ring: Schaul et al. priorities over ``ring``'s slots."""
+    ring: Ring
+    prio: jnp.ndarray      # (cap,) float32 — p_i = |td| + eps
+    max_prio: jnp.ndarray  # ()     float32 — running max (new-sample prio)
+
+
+class PlanRing(NamedTuple):
+    """D_plan: prioritized ring + 32-bit (s, a) membership keys."""
+    buf: PrioRing
+    keys: jnp.ndarray  # (cap,) uint32 — hash of each written (s, a)
+
+
+# ------------------------------------------------------------------ uniform
+def ring_init(capacity: int, state_dim: int) -> Ring:
+    z = jnp.zeros
+    return Ring(z((capacity, state_dim), jnp.float32),
+                z((capacity,), jnp.int32),
+                z((capacity,), jnp.float32),
+                z((capacity, state_dim), jnp.float32),
+                z((capacity,), jnp.float32),
+                z((), jnp.int32), z((), jnp.int32))
+
+
+def _write_slots(ptr, capacity, mask):
+    """Ring slots for the masked-in rows (compacted so B writes advance the
+    cursor by exactly ``mask.sum()``); masked-out rows map to ``capacity``,
+    which ``mode="drop"`` discards.  A batch larger than the buffer would
+    alias ring slots and the per-field scatters would resolve the conflict
+    independently (corrupt transitions), so that is rejected at trace
+    time — size buffers to at least one fleet's width."""
+    if mask.shape[0] > capacity:
+        raise ValueError(
+            f"batched write of {mask.shape[0]} rows exceeds buffer "
+            f"capacity {capacity}; raise the buffer cap to at least the "
+            f"fleet's cell count")
+    offset = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    idx = jnp.where(mask, (ptr + offset) % capacity, capacity)
+    return idx, mask.sum().astype(jnp.int32)
+
+
+def ring_add(buf: Ring, s, a, r, s2, done, mask=None) -> Ring:
+    """Write a batch of B transitions at consecutive ring slots."""
+    if mask is None:
+        mask = jnp.ones(a.shape[0], bool)
+    cap = buf.capacity
+    idx, n_new = _write_slots(buf.ptr, cap, mask)
+    return Ring(
+        s=buf.s.at[idx].set(s, mode="drop"),
+        a=buf.a.at[idx].set(a.astype(jnp.int32), mode="drop"),
+        r=buf.r.at[idx].set(r.astype(jnp.float32), mode="drop"),
+        s2=buf.s2.at[idx].set(s2, mode="drop"),
+        done=buf.done.at[idx].set(done.astype(jnp.float32), mode="drop"),
+        ptr=(buf.ptr + n_new) % cap,
+        size=jnp.minimum(buf.size + n_new, cap),
+    )
+
+
+def _gather(buf: Ring, idx):
+    return (buf.s[idx], buf.a[idx], buf.r[idx], buf.s2[idx], buf.done[idx])
+
+
+def ring_sample(buf: Ring, key, batch: int):
+    """Uniform minibatch over the written slots.  Requires size ≥ 1 (the
+    trainer gates updates on size ≥ batch); indices never touch unwritten
+    slots because they are drawn below ``size``."""
+    idx = jax.random.randint(key, (batch,), 0, jnp.maximum(buf.size, 1))
+    return _gather(buf, idx), idx
+
+
+# -------------------------------------------------------------- prioritized
+def prio_init(capacity: int, state_dim: int) -> PrioRing:
+    return PrioRing(ring_init(capacity, state_dim),
+                    jnp.zeros((capacity,), jnp.float32),
+                    jnp.ones((), jnp.float32))
+
+
+def prio_add(buf: PrioRing, s, a, r, s2, done, mask=None) -> PrioRing:
+    """Ring write; new samples enter at the running max priority."""
+    if mask is None:
+        mask = jnp.ones(a.shape[0], bool)
+    idx, _ = _write_slots(buf.ring.ptr, buf.ring.capacity, mask)
+    prio = buf.prio.at[idx].set(buf.max_prio, mode="drop")
+    return PrioRing(ring_add(buf.ring, s, a, r, s2, done, mask), prio,
+                    buf.max_prio)
+
+
+def prio_sample(buf: PrioRing, key, batch: int, *, alpha: float = 0.6,
+                beta: float = 0.4):
+    """Gumbel-top-k prioritized minibatch.  Returns (batch, idx, weights).
+
+    Finite logits exist only on written slots, so whenever size ≥ batch the
+    draw can never return an unwritten slot (−inf + Gumbel < any finite
+    perturbed logit) — property-tested in tests/test_hltrain.py.
+    """
+    cap = buf.ring.capacity
+    written = jnp.arange(cap) < buf.ring.size
+    logp = jnp.where(written, alpha * jnp.log(buf.prio + 1e-12), -jnp.inf)
+    gumbel = jax.random.gumbel(key, (cap,))
+    _, idx = jax.lax.top_k(jnp.where(written, logp + gumbel, -jnp.inf),
+                           batch)
+    p_alpha = jnp.where(written, buf.prio, 0.0) ** alpha
+    probs = p_alpha / jnp.maximum(p_alpha.sum(), 1e-12)
+    w = (jnp.maximum(buf.ring.size, 1) * probs[idx]) ** (-beta)
+    w = (w / jnp.maximum(w.max(), 1e-12)).astype(jnp.float32)
+    return _gather(buf.ring, idx), idx, w
+
+
+def prio_update(buf: PrioRing, idx, td_errors, mask=None) -> PrioRing:
+    """Set priorities |td| + 1e-4 at ``idx`` (masked rows dropped)."""
+    if mask is None:
+        mask = jnp.ones(idx.shape[0], bool)
+    p = jnp.abs(td_errors).astype(jnp.float32) + 1e-4
+    slots = jnp.where(mask, idx, buf.ring.capacity)
+    prio = buf.prio.at[slots].set(p, mode="drop")
+    max_prio = jnp.maximum(buf.max_prio, jnp.where(mask, p, 0.0).max())
+    return PrioRing(buf.ring, prio, max_prio)
+
+
+# --------------------------------------------------------------- plan (s,a)
+def hash_state_action(s: jnp.ndarray, a: jnp.ndarray,
+                      decimals: int = 3) -> jnp.ndarray:
+    """(B,) uint32 key of 3-decimal-quantized states ⊕ actions.
+
+    Multiply-XOR of per-feature odd constants, action folded in, murmur3
+    finalizer for avalanche.  Matches the Python PlanBuffer's
+    round(s, 3)-tuple key semantics up to 32-bit collisions.
+    """
+    q = jnp.round(s * (10.0 ** decimals)).astype(jnp.int32).astype(
+        jnp.uint32)
+    j = jnp.arange(q.shape[-1], dtype=jnp.uint32)
+    c = (j * jnp.uint32(2654435761) + jnp.uint32(0x9E3779B1)) | jnp.uint32(1)
+    h = (q * c).sum(-1, dtype=jnp.uint32)
+    h = h ^ (a.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B))
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    return h ^ (h >> 16)
+
+
+def plan_init(capacity: int, state_dim: int) -> PlanRing:
+    return PlanRing(prio_init(capacity, state_dim),
+                    jnp.zeros((capacity,), jnp.uint32))
+
+
+def plan_contains(buf: PlanRing, h: jnp.ndarray) -> jnp.ndarray:
+    """(B,) bool — is each key already among the written slots?  O(B·cap)
+    dense compare; keep plan capacity modest (default 4096) so this stays
+    cheap relative to the network forward passes."""
+    written = jnp.arange(buf.buf.ring.capacity) < buf.buf.ring.size
+    return (written[None, :] & (buf.keys[None, :] == h[:, None])).any(-1)
+
+
+def plan_add(buf: PlanRing, h, s, a, r, s2, done, mask=None) -> PlanRing:
+    """Write the masked-in (novel) rows and record their keys.  The caller
+    computes ``mask = novel & session_active``; non-novel suggestions are
+    skipped entirely, exactly like Algorithm 1 lines 28–32 (the stored
+    entry keeps its data until the ring overwrites it)."""
+    if mask is None:
+        mask = jnp.ones(a.shape[0], bool)
+    idx, _ = _write_slots(buf.buf.ring.ptr, buf.buf.ring.capacity, mask)
+    keys = buf.keys.at[idx].set(h, mode="drop")
+    return PlanRing(prio_add(buf.buf, s, a, r, s2, done, mask), keys)

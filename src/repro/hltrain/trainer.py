@@ -1,0 +1,359 @@
+"""Fully-jitted Hybrid Learning (Deep Dyna-Q, Algorithm 1) over FleetEnv.
+
+``repro.core.agent.HLAgent`` steps the Python ``EdgeCloudEnv`` one call at
+a time (~10⁴ real decisions/s); this trainer runs the same three phases on
+the vectorized ``repro.fleet`` substrate with everything device-resident:
+
+  (1) **Direct RL** — ``lax.scan`` over sessions × steps; every fleet step
+      collects C real transitions at once under *per-cell* ε-schedules
+      (each cell jitters its decay horizon, diversifying exploration across
+      the fleet) and ring-writes them into D_direct / D_world.
+  (2) **System model** — minibatch updates of System(s, a; θs) on
+      fleet-wide uniform draws from D_world.
+  (3) **Planning** — the model scores all actions at every cell's current
+      state; the K best are novelty-checked against D_plan's hashed (s, a)
+      membership and only novel pairs are *verified with one real request*
+      (Algorithm 1 line 29) — forking the planning stream is free because
+      ``FleetState`` is immutable.  The policy then trains on prioritized
+      minibatches from D_plan.
+
+One DQN and one system model are shared across all cells (fleet-wide
+minibatches), so training at C cells multiplies data collection, not
+parameter count.  The per-epoch α-schedule (shift direct → planning) is
+expressed as *masked* fixed-length scans: every epoch compiles to the same
+XLA program and session slots beyond the α-scaled count leave the carry
+untouched, so the whole run is two compilations (epoch chunk + eval).
+
+Real-step accounting matches the paper's Table VI exactly: every direct
+step contributes C real interactions and every *novel* planning
+verification contributes one per novel cell; both counters live in the
+carry and are reported per epoch.
+
+The DQN/system-model factories and the pure ``sync_target`` path are the
+same ones the Python trainers use (``repro.core.dqn`` /
+``repro.core.system_model``) — one implementation, two harnesses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dqn import make_dqn
+from repro.core.networks import apply_mlp_net
+from repro.core.system_model import make_system_model
+from repro.fleet import latency
+from repro.fleet.env import FleetConfig, make_fleet_env
+from repro.fleet.workload import FleetScenario
+from repro.hltrain.buffers import (Ring, PrioRing, PlanRing, ring_init,
+                                   ring_add, ring_sample, prio_init,
+                                   prio_add, prio_sample, prio_update,
+                                   plan_init, plan_contains, plan_add,
+                                   hash_state_action)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetHLParams:
+    """Hyper-parameters; defaults mirror ``HLHyperParams`` where shared."""
+    epochs: int = 60
+    n_direct: int = 8        # direct-RL session slots per epoch
+    t_direct: int = 10       # real fleet steps per direct session
+    n_world: int = 24        # system-model minibatches per epoch
+    n_suggest: int = 6       # planning session slots per epoch
+    t_suggest: int = 5       # planning rollout length
+    n_plan: int = 24         # policy minibatches from D_plan per epoch
+    k_best: int = 3          # K most promising actions verified per state
+    batch: int = 128         # fleet-wide minibatch size
+    # Update multipliers: a fleet session collects C× the transitions of
+    # the Python loop's session, so matching its *updates-per-transition*
+    # ratio needs several gradient steps per session slot.  1 = the exact
+    # Algorithm-1 cadence (used by the parity tests); fleet-scale launches
+    # set these higher (see benchmarks/hltrain.py).
+    updates_per_direct: int = 1   # DQN minibatches per direct session
+    updates_per_plan: int = 1     # DQN minibatches per plan-train slot
+    gamma: float = 0.95
+    lr: float = 1e-3
+    model_lr: float = 2e-3
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_steps: int = 1500   # in per-cell direct steps
+    eps_cell_jitter: float = 0.5  # per-cell decay-horizon jitter (±50%)
+    alpha: float = 0.6            # PER exponent
+    beta: float = 0.4             # PER importance-weight exponent
+    target_sync_every: int = 4    # direct sessions between target syncs
+    direct_cap: int = 65536
+    world_cap: int = 65536
+    plan_cap: int = 4096
+    hidden: tuple = (128, 128)
+    seed: int = 0
+
+
+class HLTrainState(NamedTuple):
+    """Whole-trainer carry: parameters, buffers, env, counters."""
+    key: jnp.ndarray
+    dqn: object              # DQNState
+    sm: object               # SystemModelState
+    d_direct: PrioRing
+    d_world: Ring
+    d_plan: PlanRing
+    env: object              # FleetState
+    obs: jnp.ndarray         # (C, D)
+    eps_scale: jnp.ndarray   # (C,) per-cell ε-decay multiplier
+    steps_per_cell: jnp.ndarray   # () int32 — direct steps taken per cell
+    direct_steps: jnp.ndarray     # () int32 — total real direct transitions
+    verify_steps: jnp.ndarray     # () int32 — total real verifications
+    sessions: jnp.ndarray         # () int32 — direct sessions completed
+
+    @property
+    def real_steps(self):
+        """Table-VI real-interaction count (direct + verification)."""
+        return self.direct_steps + self.verify_steps
+
+
+class FleetHLTrainer(NamedTuple):
+    init: callable       # (key, scenario) -> HLTrainState
+    run: callable        # (state, scenario, epoch_start, n_epochs) ->
+    #                      (state, per-epoch metrics dict); jitted, static
+    #                      n_epochs — chunk epochs to interleave host evals
+    resume: callable     # (state, scenario) -> state; call after swapping
+    #                      the scenario (curriculum stage / trace row)
+    act_greedy: callable  # (params, obs (C, D)) -> (C,) int32
+
+
+def _where_tree(pred, new, old):
+    """Scalar-predicate select over arbitrary pytrees (params, buffers)."""
+    return jax.tree.map(lambda n, o: jnp.where(pred, n, o), new, old)
+
+
+def session_schedule(hp: FleetHLParams) -> dict:
+    """Per-epoch α-scaled session counts, max(1, round(frac · n)), computed
+    host-side in float64 so they match the Python ``HLAgent`` loop's
+    ``int(round(...))`` bit-for-bit (f32 rounding diverges at the exact
+    half-integer boundaries).  Single source of truth for the trainer's
+    masked scans and for ``metrics.real_step_budget``."""
+    e = np.arange(1, hp.epochs + 1, dtype=np.float64)
+    alpha = e / hp.epochs
+
+    def count(frac, n):
+        return np.maximum(1, np.round(frac * n)).astype(np.int32)
+
+    return {"direct": count(1 - alpha / 2, hp.n_direct),
+            "world": count(1 - alpha / 2, hp.n_world),
+            "suggest": count((alpha + 1) / 2, hp.n_suggest),
+            "plan": count((alpha + 1) / 2, hp.n_plan)}
+
+
+def make_hl_trainer(cfg: FleetConfig, hp: FleetHLParams = None,
+                    ) -> FleetHLTrainer:
+    hp = hp or FleetHLParams()
+    env = make_fleet_env(cfg)
+    state_dim = cfg.state_dim
+    n_actions = latency.N_ACTIONS
+    dqn_init, _, dqn_update, dqn_sync, _ = make_dqn(
+        state_dim, n_actions, hidden=hp.hidden, lr=hp.lr, gamma=hp.gamma)
+    sm_init, _, sm_predict_all, sm_update = make_system_model(
+        state_dim, n_actions, lr=hp.model_lr)
+
+    # ---------------------------------------------------------------- init
+    def init(key, scenario: FleetScenario) -> HLTrainState:
+        n_cells = scenario.n_cells
+        k_dqn, k_sm, k_env, k_eps, key = jax.random.split(key, 5)
+        env_state = env.init(k_env, scenario)
+        jitter = hp.eps_cell_jitter * (
+            2.0 * jax.random.uniform(k_eps, (n_cells,)) - 1.0)
+        zero = jnp.zeros((), jnp.int32)
+        return HLTrainState(
+            key=key, dqn=dqn_init(k_dqn), sm=sm_init(k_sm),
+            d_direct=prio_init(hp.direct_cap, state_dim),
+            d_world=ring_init(hp.world_cap, state_dim),
+            d_plan=plan_init(hp.plan_cap, state_dim),
+            env=env_state, obs=env.observe(scenario, env_state),
+            eps_scale=1.0 + jitter,
+            steps_per_cell=zero, direct_steps=zero, verify_steps=zero,
+            sessions=zero)
+
+    def resume(state: HLTrainState, scenario: FleetScenario) -> HLTrainState:
+        """Re-anchor the carry after a scenario swap (user counts only):
+        abort in-flight rounds and recompute observations."""
+        env_state = env.reset_rounds(state.env)
+        return state._replace(env=env_state,
+                              obs=env.observe(scenario, env_state))
+
+    @jax.jit
+    def act_greedy(params, obs):
+        return jnp.argmax(apply_mlp_net(params, obs), axis=-1).astype(
+            jnp.int32)
+
+    # ------------------------------------------------------------ phase (1)
+    def make_phases(scenario: FleetScenario):
+        n_cells = scenario.n_cells
+
+        def epsilon(st):
+            frac = jnp.minimum(
+                1.0, st.steps_per_cell / (hp.eps_decay_steps * st.eps_scale))
+            return hp.eps_start + frac * (hp.eps_end - hp.eps_start)
+
+        def direct_step(st, _):
+            key, k_eps, k_act = jax.random.split(st.key, 3)
+            greedy = jnp.argmax(apply_mlp_net(st.dqn.params, st.obs), -1)
+            rand_a = jax.random.randint(k_act, (n_cells,), 0, n_actions)
+            explore = jax.random.uniform(k_eps, (n_cells,)) < epsilon(st)
+            a = jnp.where(explore, rand_a, greedy).astype(jnp.int32)
+            env2, obs2, r, done, _ = env.step(scenario, st.env, a)
+            st = st._replace(
+                key=key, env=env2, obs=obs2,
+                d_direct=prio_add(st.d_direct, st.obs, a, r, obs2, done),
+                d_world=ring_add(st.d_world, st.obs, a, r, obs2, done),
+                steps_per_cell=st.steps_per_cell + 1,
+                direct_steps=st.direct_steps + n_cells)
+            return st, r.mean()
+
+        def dqn_train(st, buf: PrioRing):
+            """One prioritized DQN update (no-op until buf holds a batch).
+            Returns (new dqn, new buf priorities, applied?, td loss)."""
+            key, k_s = jax.random.split(st.key)
+            batch, idx, w = prio_sample(buf, k_s, hp.batch,
+                                        alpha=hp.alpha, beta=hp.beta)
+            new_dqn, loss, td = dqn_update(st.dqn, batch, w)
+            ready = buf.ring.size >= hp.batch
+            dqn = _where_tree(ready, new_dqn, st.dqn)
+            buf = prio_update(buf, idx, td,
+                              mask=ready & jnp.ones(hp.batch, bool))
+            # pre-warmup minibatches gather unwritten slots; keep their
+            # (meaningless) loss out of the metrics
+            loss = jnp.where(ready, loss, jnp.nan)
+            return st._replace(key=key, dqn=dqn), buf, ready, loss
+
+        def direct_session(st):
+            st, rs = jax.lax.scan(direct_step, st, None, length=hp.t_direct)
+
+            def upd(st, _):
+                st, d_direct, _, loss = dqn_train(st, st.d_direct)
+                return st._replace(d_direct=d_direct), loss
+
+            st, losses = jax.lax.scan(upd, st, None,
+                                      length=hp.updates_per_direct)
+            loss = losses.mean()
+            st = st._replace(sessions=st.sessions + 1)
+            sync = (st.sessions % hp.target_sync_every) == 0
+            dqn = _where_tree(sync, dqn_sync(st.dqn), st.dqn)
+            return st._replace(dqn=dqn), rs.mean(), loss
+
+        # -------------------------------------------------------- phase (2)
+        def world_session(st):
+            key, k_s = jax.random.split(st.key)
+            batch, _ = ring_sample(st.d_world, k_s, hp.batch)
+            new_sm, loss = sm_update(st.sm, batch)
+            ready = st.d_world.size >= hp.batch
+            return st._replace(
+                key=key, sm=_where_tree(ready, new_sm, st.sm)
+            ), jnp.where(ready, loss, jnp.nan)
+
+        # -------------------------------------------------------- phase (3)
+        def plan_step(carry, _):
+            """Model-suggest → novelty-gate → verify-with-real-request."""
+            st, p_env, p_obs = carry
+            r_hat, s2_hat = jax.vmap(sm_predict_all, in_axes=(None, 0))(
+                st.sm.params, p_obs)            # (C, A), (C, A, D)
+            q_next = apply_mlp_net(st.dqn.params, s2_hat).max(-1)
+            value = r_hat + hp.gamma * q_next   # one-step model lookahead
+            _, cand = jax.lax.top_k(value, hp.k_best)
+            for k in range(hp.k_best):
+                a_k = cand[:, k].astype(jnp.int32)
+                h = hash_state_action(p_obs, a_k)
+                novel = ~plan_contains(st.d_plan, h)
+                # fork the planning stream: p_env is immutable, so stepping
+                # it K times from the same state costs nothing extra
+                _, obs2, r, done, _ = env.step(scenario, p_env, a_k)
+                st = st._replace(
+                    d_plan=plan_add(st.d_plan, h, p_obs, a_k, r, obs2,
+                                    done, mask=novel),
+                    verify_steps=st.verify_steps
+                    + novel.sum().astype(jnp.int32))
+            p_env, p_obs, _, _, _ = env.step(scenario, p_env,
+                                             cand[:, 0].astype(jnp.int32))
+            return (st, p_env, p_obs), None
+
+        def plan_session(st):
+            (st, _, _), _ = jax.lax.scan(plan_step, (st, st.env, st.obs),
+                                         None, length=hp.t_suggest)
+            return st
+
+        # -------------------------------------------------------- one epoch
+        schedule = {k: jnp.asarray(v) for k, v in
+                    session_schedule(hp).items()}
+
+        def epoch(st, epoch_idx):
+            e = jnp.minimum(epoch_idx, hp.epochs - 1)
+            n_direct_act = schedule["direct"][e]
+            n_world_act = schedule["world"][e]
+            n_suggest_act = schedule["suggest"][e]
+            n_plan_act = schedule["plan"][e]
+
+            def masked(session_fn, n_active):
+                """Fixed-length scan; slots ≥ n_active leave ``st`` as-is,
+                so one compilation serves every α."""
+                def body(st, i):
+                    out = session_fn(st)
+                    st2, ys = (out, ()) if isinstance(out, HLTrainState) \
+                        else (out[0], out[1:])
+                    active = i < n_active
+                    return (_where_tree(active, st2, st),
+                            jax.tree.map(
+                                lambda y: jnp.where(active, y, jnp.nan), ys))
+                return body
+
+            st, (mean_r, q_loss) = jax.lax.scan(
+                masked(direct_session, n_direct_act), st,
+                jnp.arange(hp.n_direct))
+            st, (sm_loss,) = jax.lax.scan(
+                masked(world_session, n_world_act), st,
+                jnp.arange(hp.n_world))
+            st, _ = jax.lax.scan(
+                masked(plan_session, n_suggest_act), st,
+                jnp.arange(hp.n_suggest))
+
+            def plan_train(st):
+                def upd(st, _):
+                    st, d_plan_buf, _, loss = dqn_train(st, st.d_plan.buf)
+                    return st._replace(
+                        d_plan=st.d_plan._replace(buf=d_plan_buf)), loss
+
+                st, losses = jax.lax.scan(upd, st, None,
+                                          length=hp.updates_per_plan)
+                return st, losses.mean()
+
+            st, (p_loss,) = jax.lax.scan(
+                masked(plan_train, n_plan_act), st, jnp.arange(hp.n_plan))
+            st = st._replace(dqn=dqn_sync(st.dqn))  # epoch-end target sync
+
+            metrics = {
+                "epoch": epoch_idx,
+                "mean_reward": jnp.nanmean(mean_r),
+                "q_loss": jnp.nanmean(q_loss),
+                "sm_loss": jnp.nanmean(sm_loss),
+                "plan_loss": jnp.nanmean(p_loss),
+                "epsilon": epsilon(st).mean(),
+                "direct_steps": st.direct_steps,
+                "verify_steps": st.verify_steps,
+                "real_steps": st.real_steps,
+                "d_plan_size": st.d_plan.buf.ring.size,
+            }
+            return st, metrics
+
+        return epoch
+
+    # ----------------------------------------------------------------- run
+    @functools.partial(jax.jit, static_argnames=("n_epochs",))
+    def run(state: HLTrainState, scenario: FleetScenario,
+            epoch_start, n_epochs: int):
+        epoch = make_phases(scenario)
+        return jax.lax.scan(epoch, state,
+                            epoch_start + jnp.arange(n_epochs))
+
+    return FleetHLTrainer(init=init, run=run, resume=resume,
+                          act_greedy=act_greedy)
