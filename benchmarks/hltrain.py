@@ -2,7 +2,8 @@
 the Python ``HLAgent`` loop.
 
     PYTHONPATH=src python -m benchmarks.hltrain [--smoke]
-        [--cells 320] [--conv-cells 64] [--out BENCH_hltrain.json]
+        [--cells 320] [--conv-cells 64] [--gen-cells 48]
+        [--out BENCH_hltrain.json]
 
 Measures (written to ``BENCH_hltrain.json``):
 
@@ -18,8 +19,17 @@ Measures (written to ``BENCH_hltrain.json``):
     ``fleet.solver``'s constrained optimum with zero violations.  Real
     steps follow the paper's accounting — direct steps + novelty-gated
     planning verifications, counted per cell.
+  * **Held-out generalization by observation spec** at n_max=32: the
+    ``base`` and constraint-conditioned ``full`` specs
+    (``repro.specs.observation``) train on the *same* user-count
+    curriculum at equal real-step budget (identical hyper-parameters →
+    identical direct-step schedule), then evaluate on one shared held-out
+    random fleet.  Reports per-spec ``held_out_violation_rate`` — the
+    constraint-conditioned spec must beat ``base`` (a base-spec policy
+    cannot even see its cell's accuracy constraint, so it cannot adapt
+    across constraint levels).
 
-``--smoke`` shrinks everything to a seconds-scale CI job (tiny sessions,
+``--smoke`` shrinks everything to a minutes-scale CI job (tiny sessions,
 few epochs, no convergence target) and marks the JSON ``smoke: true``.
 """
 from __future__ import annotations
@@ -35,21 +45,31 @@ import numpy as np
 from repro.core.agent import HLAgent, HLHyperParams, ConvergenceTracker
 from repro.env.edge_cloud import EdgeCloudEnv, EnvConfig, REWARD_SCALE
 from repro.env.scenarios import SCENARIOS, CONSTRAINTS
-from repro.fleet import FleetConfig, from_table4
+from repro.fleet import FleetConfig, from_table4, random_fleet, \
+    curriculum_fleets
 from repro.fleet.workload import FleetScenario
 from repro.hltrain import (FleetHLParams, make_hl_trainer,
                            evaluate_vs_solver, optimal_rewards)
 
 CONV_SCENARIO, CONV_CONSTRAINT = "B", "85%"  # the n=5 convergence target
+GEN_N_MAX = 32  # held-out generalization fleet size (ROADMAP item)
 
 
 def tile_fleet(scn: FleetScenario, reps: int) -> FleetScenario:
     """Replicate every cell ``reps`` times (cells stay independent — they
-    draw their own backgrounds and ε-schedules)."""
+    draw their own backgrounds and ε-schedules; edge groups are offset
+    per replica so replicas never co-locate with their originals)."""
+    t1 = lambda x: None if x is None else jnp.tile(x, reps)
+    edge_group = None
+    if scn.edge_group is not None:
+        c = scn.n_cells
+        edge_group = (t1(scn.edge_group)
+                      + jnp.repeat(jnp.arange(reps, dtype=jnp.int32), c) * c)
     return FleetScenario(jnp.tile(scn.weak_s, (reps, 1)),
-                         jnp.tile(scn.weak_e, reps),
-                         jnp.tile(scn.n_users, reps),
-                         jnp.tile(scn.constraint, reps))
+                         t1(scn.weak_e), t1(scn.n_users),
+                         t1(scn.constraint),
+                         latency_target=t1(scn.latency_target),
+                         edge_group=edge_group)
 
 
 def bench_python_hl(epochs: int) -> dict:
@@ -130,8 +150,61 @@ def bench_convergence(hp: FleetHLParams, n_cells: int, chunk: int,
     }
 
 
+def bench_generalization(hp: FleetHLParams, n_cells: int, chunk: int,
+                         specs=("base", "full")) -> dict:
+    """Held-out generalization at n_max=GEN_N_MAX by observation spec.
+
+    Every spec trains on the *same* curriculum stages (same fleet PRNG
+    key) with identical hyper-parameters — i.e. at an equal real-step
+    budget — and is scored on one shared held-out random fleet.  The
+    solver optimum for the held-out fleet is computed once and reused.
+    """
+    n_stages = -(-hp.epochs // chunk)  # ceil
+    stages = curriculum_fleets(jax.random.PRNGKey(42), n_cells, n_stages,
+                               start=2, end=GEN_N_MAX)
+    held = random_fleet(jax.random.PRNGKey(4242), n_cells,
+                        n_max=GEN_N_MAX)
+    held_opt = optimal_rewards(held)
+    rows = {}
+    for spec in specs:
+        cfg = FleetConfig(n_max=GEN_N_MAX, obs_spec=spec)
+        trainer = make_hl_trainer(cfg, hp)
+        state = trainer.init(jax.random.PRNGKey(0), stages[0])
+        t0 = time.perf_counter()
+        for s, scn in enumerate(stages):
+            if s:
+                state = trainer.resume(state, scn)
+            start = s * chunk
+            n = min(chunk, hp.epochs - start)
+            state, _ = jax.block_until_ready(
+                trainer.run(state, scn, start, n))
+        wall = time.perf_counter() - t0
+        ev = evaluate_vs_solver(state.dqn.params, held, cfg,
+                                opt_reward=held_opt)
+        rows[spec] = {
+            "obs_dim": cfg.state_dim,
+            "held_out_violation_rate": float(ev["violation_rate"]),
+            "held_out_reward_gap": float(ev["mean_reward_gap"]),
+            "held_out_art_ms": float(ev["art"].mean()),
+            "real_steps": int(state.real_steps),
+            "direct_steps": int(state.direct_steps),
+            "wall_s": round(wall, 1),
+        }
+        print(f"  {spec:>10s} (dim {cfg.state_dim:3d}): held-out "
+              f"violations {rows[spec]['held_out_violation_rate']:.1%}, "
+              f"reward gap {rows[spec]['held_out_reward_gap']:.1%}, "
+              f"{rows[spec]['real_steps']:,} real steps, {wall:.0f}s")
+    rows["n_cells"] = n_cells
+    rows["n_max"] = GEN_N_MAX
+    # richest spec (last) vs plainest (first) on held-out violations
+    rows["full_beats_base"] = bool(
+        rows[specs[-1]]["held_out_violation_rate"]
+        < rows[specs[0]]["held_out_violation_rate"])
+    return rows
+
+
 def main(smoke: bool = False, cells: int = 320, conv_cells: int = 64,
-         out: str = "BENCH_hltrain.json") -> dict:
+         gen_cells: int = 64, out: str = "BENCH_hltrain.json") -> dict:
     if smoke:
         hp = FleetHLParams(epochs=4, n_direct=4, t_direct=5, n_world=8,
                            n_suggest=2, t_suggest=3, n_plan=8, batch=64,
@@ -148,6 +221,15 @@ def main(smoke: bool = False, cells: int = 320, conv_cells: int = 64,
                                 updates_per_direct=8, updates_per_plan=8,
                                 k_best=4, n_suggest=10, n_world=32)
         py_epochs, chunk, n_tiles = 8, 5, max(1, cells // 20)
+    # generalization: one minutes-scale config for smoke and full runs.
+    # γ=0.995 matters at n_max=32: with 32-step rounds, γ=0.95 discounts
+    # the terminal constraint penalty to ~0.2 by the first decision, so
+    # the policy barely credits early actions for end-of-round violations.
+    gen_hp = FleetHLParams(epochs=30, n_direct=4, t_direct=8, n_world=12,
+                           n_suggest=2, t_suggest=3, n_plan=16,
+                           batch=256, eps_decay_steps=600, gamma=0.995,
+                           updates_per_direct=6, updates_per_plan=6)
+    gen_chunk = 6
 
     print("— Python HLAgent loop (1 cell, n=5) —")
     py = bench_python_hl(py_epochs)
@@ -170,6 +252,12 @@ def main(smoke: bool = False, cells: int = 320, conv_cells: int = 64,
           f"verify), {conv['wall_s']:.0f}s wall, converged="
           f"{conv['converged_within_5pct']}")
 
+    print(f"— held-out generalization by obs spec (n_max={GEN_N_MAX}, "
+          f"{gen_cells} cells, equal real-step budget) —")
+    gen = bench_generalization(gen_hp, gen_cells, gen_chunk)
+    print(f"  constraint-conditioned 'full' beats 'base' on held-out "
+          f"violations: {gen['full_beats_base']}")
+
     result = {
         "smoke": smoke,
         "python_hl": {k: round(v, 3) if isinstance(v, float) else v
@@ -180,6 +268,7 @@ def main(smoke: bool = False, cells: int = 320, conv_cells: int = 64,
         "speedup_target_50x_met": bool(speedup >= 50),
         "convergence_n5": {k: round(v, 4) if isinstance(v, float) else v
                            for k, v in conv.items()},
+        "generalization_n32": gen,
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
@@ -192,9 +281,12 @@ def main(smoke: bool = False, cells: int = 320, conv_cells: int = 64,
 if __name__ == "__main__":
     p = argparse.ArgumentParser()
     p.add_argument("--smoke", action="store_true",
-                   help="seconds-scale config for CI")
+                   help="minutes-scale CI config (tiny throughput/"
+                        "convergence sections; the n_max=32 "
+                        "generalization section runs at full size)")
     p.add_argument("--cells", type=int, default=320)
     p.add_argument("--conv-cells", type=int, default=64)
+    p.add_argument("--gen-cells", type=int, default=64)
     p.add_argument("--out", default="BENCH_hltrain.json")
     a = p.parse_args()
-    main(a.smoke, a.cells, a.conv_cells, a.out)
+    main(a.smoke, a.cells, a.conv_cells, a.gen_cells, a.out)

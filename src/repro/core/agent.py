@@ -116,11 +116,11 @@ class HLAgent:
         key = jax.random.PRNGKey(hp.seed)
         k1, k2 = jax.random.split(key)
         (self.dqn_init, self.q_values, self.dqn_update, self.dqn_sync,
-         self.act_greedy) = make_dqn(env.state_dim, env.n_actions,
+         self.act_greedy) = make_dqn(env.spec, env.n_actions,
                                      hidden=hp.hidden, lr=hp.lr,
                                      gamma=hp.gamma)
         (self.sm_init, self.sm_predict, self.sm_predict_all,
-         self.sm_update) = make_system_model(env.state_dim, env.n_actions,
+         self.sm_update) = make_system_model(env.spec, env.n_actions,
                                              lr=hp.model_lr)
         self.dqn = self.dqn_init(k1)
         self.sm = self.sm_init(k2)

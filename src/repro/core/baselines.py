@@ -32,7 +32,7 @@ class DQLAgent:
         hp = self.hp
         self.rng = np.random.default_rng(hp.seed)
         (self.dqn_init, _, self.dqn_update, self.dqn_sync,
-         self.act_greedy) = make_dqn(env.state_dim, env.n_actions,
+         self.act_greedy) = make_dqn(env.spec, env.n_actions,
                                      hidden=hp.hidden, lr=hp.lr,
                                      gamma=hp.gamma)
         self.dqn = self.dqn_init(jax.random.PRNGKey(hp.seed))

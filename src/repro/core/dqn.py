@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.networks import init_mlp_net, apply_mlp_net
+from repro.specs.observation import spec_dim
 from repro.training.optimizer import adam, apply_updates
 
 
@@ -22,8 +23,12 @@ class DQNState(NamedTuple):
     step: jnp.ndarray
 
 
-def make_dqn(state_dim: int, n_actions: int, *, hidden=(64, 64),
+def make_dqn(spec, n_actions: int, *, hidden=(64, 64),
              lr: float = 1e-3, gamma: float = 0.95):
+    """``spec`` is an ``ObservationSpec`` (preferred — the network's input
+    width and feature normalization are whatever the spec encodes) or a
+    plain int input dim for spec-less callers."""
+    state_dim = spec_dim(spec)
     opt = adam(lr)
 
     def init(key) -> DQNState:

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.networks import init_mlp_net, apply_mlp_net
+from repro.specs.observation import spec_dim
 from repro.training.optimizer import adam, apply_updates
 
 
@@ -23,8 +24,11 @@ class SystemModelState(NamedTuple):
     step: jnp.ndarray
 
 
-def make_system_model(state_dim: int, n_actions: int, *, hidden=(96, 96),
+def make_system_model(spec, n_actions: int, *, hidden=(96, 96),
                       lr: float = 1e-3):
+    """``spec``: an ``ObservationSpec`` (input/prediction width derived
+    from it) or a plain int state dim."""
+    state_dim = spec_dim(spec)
     opt = adam(lr)
     out_dim = 1 + state_dim  # [r̂, ŝ′]
 

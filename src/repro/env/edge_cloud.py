@@ -26,6 +26,8 @@ import numpy as np
 
 from repro.env import latency_model as lm
 from repro.env.scenarios import Scenario, CONSTRAINTS
+from repro.specs.observation import (ObsInputs, make_spec,
+                                     DEFAULT_LATENCY_TARGET_MS)
 
 # Accuracy-constraint penalty (reward units; 1 unit = 100 ms): a fixed
 # violation charge plus a *graded* term per % of accuracy deficit. The
@@ -46,6 +48,13 @@ class EnvConfig:
     bg_busy_prob: float = 0.1
     seed: int = 0
     quiet: bool = False  # disable background fluctuations (for eval)
+    # Observation layout variant (repro.specs.observation.SPEC_NAMES).
+    # "base" is bit-compatible with the pre-spec Table-II layout, so old
+    # checkpoints stay loadable; richer variants append feature blocks.
+    obs_spec: str = "base"
+    # Latency target (ms) for the "constraint" observation block. Purely
+    # a conditioning input — the reward is unchanged.
+    latency_target: float = DEFAULT_LATENCY_TARGET_MS
 
     def __post_init__(self):
         self.scenario = self.scenario.for_users(self.n_users)
@@ -59,12 +68,11 @@ class EdgeCloudEnv:
         self.n = cfg.n_users
         self.rng = np.random.default_rng(cfg.seed)
         self.n_actions = lm.N_ACTIONS
-        # Table II features + requesting-user one-hot + round context
-        # (accuracy-so-far + progress). The round-average accuracy term in
-        # the reward makes the MDP non-Markovian without the last two —
-        # user i's Q-values cannot anticipate the terminal constraint
-        # penalty unless the state carries the accuracy committed so far.
-        self.state_dim = 4 * self.n + 8
+        # Observation layout and width are owned by the spec (see
+        # repro.specs.observation for the block definitions and why the
+        # round context makes the MDP Markovian).
+        self.spec = make_spec(cfg.obs_spec, self.n)
+        self.state_dim = self.spec.dim
         self.reset()
 
     # ---------------- background dynamics ----------------
@@ -93,27 +101,25 @@ class EdgeCloudEnv:
         return self.observe()
 
     def observe(self) -> np.ndarray:
-        """Float feature vector (Table II state + requesting-node one-hot)."""
+        """Observation under ``self.spec`` — the layout lives in
+        ``repro.specs.observation``; this method only supplies the
+        semantic inputs (occupancies, committed accuracy, targets)."""
         sc = self.cfg.scenario
         k_edge = int((self.actions == lm.A_EDGE).sum()) + self.bg["bg_edge"]
         k_cloud = int((self.actions == lm.A_CLOUD).sum()) + self.bg["bg_cloud"]
-        user_onehot = np.zeros(self.n)
-        user_onehot[self.user % self.n] = 1.0
         decided = self.actions >= 0
         acc_sum = float(lm.action_accuracy(
             np.where(decided, self.actions, 0))[decided].sum())
-        return np.concatenate([
-            user_onehot,
-            self.bg["busy_p_s"].astype(float),
-            self.bg["busy_m_s"].astype(float),
-            sc.weak_s_arr().astype(float),
-            [min(k_edge, 8) / 8.0, float(self.bg["busy_m_e"]),
-             float(sc.weak_e)],
-            [min(k_cloud, 8) / 8.0, float(self.bg["busy_m_c"]),
-             float(sc.weak_e)],
-            # round context: accuracy committed so far + round progress
-            [acc_sum / (100.0 * self.n), self.user / self.n],
-        ]).astype(np.float32)
+        # a single cell *is* the fleet / its own edge group
+        return self.spec.encode_np(ObsInputs(
+            user=self.user % self.n, n_users=self.n,
+            busy_p_s=self.bg["busy_p_s"], busy_m_s=self.bg["busy_m_s"],
+            weak_s=sc.weak_s_arr(), weak_e=sc.weak_e,
+            busy_m_e=self.bg["busy_m_e"], busy_m_c=self.bg["busy_m_c"],
+            k_edge=k_edge, k_cloud=k_cloud, acc_sum=acc_sum,
+            cloud_fleet=k_cloud, edge_group=k_edge,
+            constraint=self.cfg.constraint,
+            latency_target=self.cfg.latency_target))
 
     def discrete_key(self) -> tuple:
         """Full-observation tuple for tabular (AutoScale-style) agents."""
@@ -186,6 +192,7 @@ class EdgeCloudEnv:
         new.cfg = self.cfg
         new.n = self.n
         new.n_actions = self.n_actions
+        new.spec = self.spec
         new.state_dim = self.state_dim
         rng = np.random.default_rng()
         rng.bit_generator.state = self.rng.bit_generator.state

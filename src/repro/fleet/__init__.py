@@ -13,13 +13,13 @@ are simulated in a single jitted ``lax.scan``.  Submodules:
 from repro.fleet.workload import (FleetScenario, from_table4, random_fleet,
                                   curriculum_fleets)
 from repro.fleet.env import FleetConfig, FleetState, make_fleet_env
-from repro.fleet.solver import solve_optimal
+from repro.fleet.solver import solve_optimal, solve_fleet
 from repro.fleet.evaluate import (make_greedy_evaluator,
                                   make_throughput_runner)
 
 __all__ = [
     "FleetScenario", "from_table4", "random_fleet", "curriculum_fleets",
     "FleetConfig", "FleetState", "make_fleet_env",
-    "solve_optimal",
+    "solve_optimal", "solve_fleet",
     "make_greedy_evaluator", "make_throughput_runner",
 ]

@@ -7,18 +7,19 @@ reward, the PRNG key — lives in a ``FleetState`` of stacked arrays, so one
 ``lax.scan`` over round positions simulates an entire fleet of rounds.
 
 Semantics match ``EdgeCloudEnv`` exactly (test-enforced at n_max=5): the
-same Table-II observation layout, the same dense-shaping reward with
-terminal contention settlement and graded accuracy penalty, and auto-reset
-on round completion (fresh background, cleared actions).  Cells with fewer
-than ``n_max`` users simply complete (and reset) earlier, so every cell
-issues one orchestration decision per step — heterogeneous fleets keep the
+same observation spec (layout owned by ``repro.specs.observation`` — both
+envs encode through it), the same dense-shaping reward with terminal
+contention settlement and graded accuracy penalty, and auto-reset on round
+completion (fresh background, cleared actions).  Cells with fewer than
+``n_max`` users simply complete (and reset) earlier, so every cell issues
+one orchestration decision per step — heterogeneous fleets keep the
 accelerator fully busy.
 
 API (all functions returned by ``make_fleet_env`` are pure and jitted):
 
     env = make_fleet_env(FleetConfig(n_max=5))
     state = env.init(key, scenario)            # scenario: FleetScenario
-    obs = env.observe(scenario, state)         # (C, 4*n_max+8) float32
+    obs = env.observe(scenario, state)         # (C, cfg.state_dim) float32
     state, obs, reward, done, info = env.step(scenario, state, actions)
     state, traj = env.rollout(scenario, state, actions_TC)  # (T, C) scan
 
@@ -40,6 +41,7 @@ from repro.env.edge_cloud import (PENALTY_BASE, PENALTY_PER_PCT,
                                   REWARD_SCALE)
 from repro.fleet import latency
 from repro.fleet.workload import FleetScenario
+from repro.specs.observation import ObsInputs, ObservationSpec, make_spec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,17 +49,27 @@ class FleetConfig:
     n_max: int = 5
     bg_busy_prob: float = 0.1
     quiet: bool = False  # disable background fluctuations (for eval)
-    # Cross-cell contention (ROADMAP "multi-cell contention coupling",
-    # minimal version): when True the cloud tier is one shared pool — the
-    # cloud occupancy every cell sees is the *fleet-wide* sum of assigned
-    # cloud requests, so offloading in one cell raises cloud queueing
-    # latency in every other.  Off by default; with a single cell the
-    # coupling term is identically zero (parity test-enforced).
+    # Cross-cell contention: when True the cloud tier is one shared pool —
+    # the cloud occupancy every cell sees is the *fleet-wide* sum of
+    # assigned cloud requests, so offloading in one cell raises cloud
+    # queueing latency in every other.  Off by default; with a single cell
+    # the coupling term is identically zero (parity test-enforced).
     shared_cloud: bool = False
+    # Shared-edge coupling: cells with the same ``scenario.edge_group`` id
+    # co-locate on one edge server, so each cell's edge occupancy includes
+    # its group peers' assigned edge requests.  Singleton groups (the
+    # scenario default) make the coupling identically zero.
+    shared_edge: bool = False
+    # Observation layout variant (repro.specs.observation.SPEC_NAMES);
+    # "base" is bit-compatible with the pre-spec Table-II layout.
+    obs_spec: str = "base"
+
+    def spec(self) -> ObservationSpec:
+        return make_spec(self.obs_spec, self.n_max)
 
     @property
     def state_dim(self) -> int:
-        return 4 * self.n_max + 8
+        return self.spec().dim
 
 
 class FleetBackground(NamedTuple):
@@ -87,6 +99,7 @@ class FleetEnvFns(NamedTuple):
 
 def make_fleet_env(cfg: FleetConfig) -> FleetEnvFns:
     n_max = cfg.n_max
+    spec = cfg.spec()
 
     def sample_background(key, n_cells: int) -> FleetBackground:
         if cfg.quiet:
@@ -133,6 +146,12 @@ def make_fleet_env(cfg: FleetConfig) -> FleetEnvFns:
         own = ((actions == latency.A_CLOUD) & mask).sum(-1)
         return own.sum() - own
 
+    def _edge_coupling(scenario, actions, mask):
+        """(C,) extra edge occupancy from co-located cells' assigned edge
+        requests (zero unless cfg.shared_edge / non-singleton groups)."""
+        own = ((actions == latency.A_EDGE) & mask).sum(-1)
+        return latency.group_coupling(own, scenario.edge_groups())
+
     def _round_times(scenario, state, actions):
         """Per-slot response times under the partial assignment (undecided
         slots run the d7 placeholder, exactly like the numpy env)."""
@@ -141,39 +160,52 @@ def make_fleet_env(cfg: FleetConfig) -> FleetEnvFns:
         bg_cloud = state.bg.bg_cloud
         if cfg.shared_cloud:
             bg_cloud = bg_cloud + _cloud_coupling(a_eff, mask)
+        bg_edge = state.bg.bg_edge
+        if cfg.shared_edge:
+            bg_edge = bg_edge + _edge_coupling(scenario, a_eff, mask)
         return jax.vmap(latency.response_times)(
             a_eff, scenario.weak_s, scenario.weak_e,
             state.bg.busy_p_s, state.bg.busy_m_s,
             state.bg.busy_m_e, state.bg.busy_m_c,
-            state.bg.bg_edge, bg_cloud, mask)
+            bg_edge, bg_cloud, mask)
 
     def observe(scenario: FleetScenario, state: FleetState) -> jnp.ndarray:
-        n = scenario.n_users.astype(jnp.float32)
+        """Observation under ``cfg.obs_spec`` — layout owned by
+        ``repro.specs.observation``; this function only computes the
+        semantic inputs (occupancies incl. couplings, committed accuracy,
+        fleet/group load aggregates, constraint targets)."""
         mask = scenario.user_mask()
-        k_edge = ((state.actions == latency.A_EDGE) & mask).sum(-1) \
-            + state.bg.bg_edge
-        k_cloud = ((state.actions == latency.A_CLOUD) & mask).sum(-1) \
-            + state.bg.bg_cloud
+        own_edge = ((state.actions == latency.A_EDGE) & mask).sum(-1)
+        own_cloud = ((state.actions == latency.A_CLOUD) & mask).sum(-1)
+        k_edge = own_edge + state.bg.bg_edge
+        k_cloud = own_cloud + state.bg.bg_cloud
         if cfg.shared_cloud:
             k_cloud = k_cloud + _cloud_coupling(state.actions, mask)
-        user_onehot = jax.nn.one_hot(state.user, n_max)
+        if cfg.shared_edge:
+            k_edge = k_edge + _edge_coupling(scenario, state.actions, mask)
         decided = (state.actions >= 0) & mask
         acc_sum = (latency.action_accuracy(jnp.maximum(state.actions, 0))
                    * decided).sum(-1)
-        col = lambda x: x.astype(jnp.float32)[:, None]
-        weak_e = col(scenario.weak_e)
-        return jnp.concatenate([
-            user_onehot,
-            state.bg.busy_p_s.astype(jnp.float32),
-            state.bg.busy_m_s.astype(jnp.float32),
-            scenario.weak_s.astype(jnp.float32),
-            jnp.minimum(k_edge, 8)[:, None] / 8.0,
-            col(state.bg.busy_m_e), weak_e,
-            jnp.minimum(k_cloud, 8)[:, None] / 8.0,
-            col(state.bg.busy_m_c), weak_e,
-            acc_sum[:, None] / (100.0 * n[:, None]),
-            col(state.user) / n[:, None],
-        ], axis=-1).astype(jnp.float32)
+        n_cells = scenario.n_cells
+        # fleet-wide mean cloud occupancy (cloud_load block input):
+        # every cell sees the same scalar — the cloud is one tier
+        cloud_fleet = jnp.broadcast_to(
+            (own_cloud + state.bg.bg_cloud).sum() / n_cells, (n_cells,))
+        # per-group mean edge occupancy (edge_load block input)
+        groups = scenario.edge_groups()
+        edge_occ = own_edge + state.bg.bg_edge
+        group_sz = latency.group_occupancy(jnp.ones_like(groups), groups)
+        edge_group = (latency.group_occupancy(edge_occ, groups)
+                      / jnp.maximum(1, group_sz))
+        return spec.encode_jnp(ObsInputs(
+            user=state.user, n_users=scenario.n_users,
+            busy_p_s=state.bg.busy_p_s, busy_m_s=state.bg.busy_m_s,
+            weak_s=scenario.weak_s, weak_e=scenario.weak_e,
+            busy_m_e=state.bg.busy_m_e, busy_m_c=state.bg.busy_m_c,
+            k_edge=k_edge, k_cloud=k_cloud, acc_sum=acc_sum,
+            cloud_fleet=cloud_fleet, edge_group=edge_group,
+            constraint=scenario.constraint,
+            latency_target=scenario.latency_targets()))
 
     def step(scenario: FleetScenario, state: FleetState, actions_in):
         """One orchestration decision per cell. Returns

@@ -8,8 +8,12 @@ decisions/s, the scan sustains ≥10⁵/s on CPU (``benchmarks/fleet.py``
 measures it).
 
 The policy is any ``apply_fn(params, obs) -> (C, n_actions)`` — by default
-wire in ``repro.core.networks.apply_mlp_net`` with DQN params trained on
-the 5-user environment (identical observation layout at ``n_max == 5``).
+wire in ``repro.core.networks.apply_mlp_net``.  The evaluator is
+observation-spec agnostic: the env it builds encodes through
+``cfg.spec()`` (``repro.specs.observation``), so any spec variant works as
+long as the params' input width matches ``cfg.state_dim`` — e.g. DQN
+params trained on the 5-user Python env evaluate directly at
+``n_max == 5`` under the ``base`` spec (identical layout).
 """
 from __future__ import annotations
 

@@ -17,6 +17,7 @@ same fleet).  ``mask=None`` is exactly the reference semantics.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.env import latency_model as lm
@@ -24,6 +25,38 @@ from repro.env import latency_model as lm
 N_MODELS = lm.N_MODELS
 N_ACTIONS = lm.N_ACTIONS
 A_EDGE, A_CLOUD = lm.A_EDGE, lm.A_CLOUD
+
+
+def group_slot_mask(groups: jnp.ndarray) -> jnp.ndarray:
+    """(C, C) bool — ``mask[i, j]`` iff cells i and j share an edge group.
+
+    The dense membership mask of the ``shared_edge`` coupling: row i
+    selects exactly the slots whose occupancy cell i's edge server sees.
+    Tests use it to assert occupancy conservation; the env uses the
+    segment-sum form (:func:`group_occupancy`) which is O(C), not O(C²).
+    """
+    groups = jnp.asarray(groups)
+    return groups[:, None] == groups[None, :]
+
+
+def group_occupancy(own: jnp.ndarray, groups: jnp.ndarray) -> jnp.ndarray:
+    """(C,) total occupancy of each cell's group (own contribution
+    included): ``out[i] = sum_j own[j] · [groups[j] == groups[i]]``.
+
+    Equivalent to ``group_slot_mask(groups) @ own`` but via one
+    ``segment_sum`` + gather.  Group ids must lie in [0, C).
+    """
+    groups = jnp.asarray(groups)
+    totals = jax.ops.segment_sum(own, groups,
+                                 num_segments=groups.shape[0])
+    return totals[groups]
+
+
+def group_coupling(own: jnp.ndarray, groups: jnp.ndarray) -> jnp.ndarray:
+    """(C,) extra occupancy each cell sees from *co-located* cells (its
+    edge group minus its own contribution).  Singleton groups → zero,
+    which is the uncoupled-env parity guarantee."""
+    return group_occupancy(own, groups) - own
 
 
 def action_accuracy(actions: jnp.ndarray) -> jnp.ndarray:

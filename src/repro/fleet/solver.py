@@ -124,3 +124,22 @@ def solve_optimal(scenario: Scenario, constraint: float,
     acc = lm.action_accuracy(actions)
     return {"art": float(t.mean()), "acc": float(acc.mean()),
             "actions": actions}
+
+
+def solve_fleet(scenario) -> dict:
+    """Exact per-cell optima for a ``FleetScenario`` (host-side loop over
+    :func:`solve_optimal`).  Returns stacked ``{"art", "acc"}`` arrays of
+    shape (C,).
+
+    The objective is deliberately *unchanged* by observation-spec
+    conditioning: latency targets and edge groups in the scenario are
+    observation inputs only, so the per-cell constrained ART optimum
+    remains the ground truth every spec variant is scored against (under
+    shared_cloud / shared_edge coupling it is a per-cell lower bound).
+    """
+    art = np.empty(scenario.n_cells)
+    acc = np.empty(scenario.n_cells)
+    for i in range(scenario.n_cells):
+        r = solve_optimal(*scenario.cell(i))
+        art[i], acc[i] = r["art"], r["acc"]
+    return {"art": art, "acc": acc}

@@ -26,14 +26,26 @@ import numpy as np
 
 from repro.env.scenarios import (SCENARIOS, CONSTRAINTS, CONSTRAINT_ORDER,
                                  Scenario)
+from repro.specs.observation import (DEFAULT_LATENCY_TARGET_MS,
+                                     LATENCY_TARGET_POOL)
 
 
 class FleetScenario(NamedTuple):
-    """Stacked per-cell scenario arrays (leading axis = cell)."""
+    """Stacked per-cell scenario arrays (leading axis = cell).
+
+    The two trailing fields default to ``None`` (= derive a neutral
+    value), so scenarios built before constraint conditioning / edge
+    grouping existed keep working unchanged."""
     weak_s: jnp.ndarray      # (C, n_max) bool — per end-node weak link
     weak_e: jnp.ndarray      # (C,) bool       — weak edge
     n_users: jnp.ndarray     # (C,) int32      — real users (≤ n_max)
     constraint: jnp.ndarray  # (C,) float32    — accuracy threshold (%)
+    # (C,) float32 — per-cell latency target (ms) for the "constraint"
+    # observation block; None → DEFAULT_LATENCY_TARGET_MS everywhere.
+    latency_target: jnp.ndarray | None = None
+    # (C,) int32 — edge-server co-location group ids in [0, C) for the
+    # shared_edge coupling; None → singleton groups (no co-location).
+    edge_group: jnp.ndarray | None = None
 
     @property
     def n_cells(self) -> int:
@@ -46,6 +58,19 @@ class FleetScenario(NamedTuple):
     def user_mask(self) -> jnp.ndarray:
         """(C, n_max) bool — which padded slots are real users."""
         return jnp.arange(self.n_max)[None, :] < self.n_users[:, None]
+
+    def latency_targets(self) -> jnp.ndarray:
+        """(C,) float32 latency targets, default-filled when unset."""
+        if self.latency_target is None:
+            return jnp.full((self.n_cells,), DEFAULT_LATENCY_TARGET_MS,
+                            jnp.float32)
+        return self.latency_target
+
+    def edge_groups(self) -> jnp.ndarray:
+        """(C,) int32 edge-group ids; unset → every cell its own group."""
+        if self.edge_group is None:
+            return jnp.arange(self.n_cells, dtype=jnp.int32)
+        return self.edge_group
 
     def cell(self, i: int) -> tuple[Scenario, float, int]:
         """Cell ``i`` as a (Scenario, constraint, n_users) triple for the
@@ -81,18 +106,28 @@ def from_table4(names=("A", "B", "C", "D"), constraints=CONSTRAINT_ORDER,
 def random_fleet(key, n_cells: int, n_max: int = 5, *,
                  n_users_min: int = 2, n_users_max: int | None = None,
                  weak_s_prob_max: float = 0.6, weak_e_prob: float = 0.3,
-                 constraint_pool=None) -> FleetScenario:
+                 constraint_pool=None, latency_pool=None,
+                 cells_per_edge: int = 1) -> FleetScenario:
     """Procedural random topologies beyond Table IV.
 
     Each cell draws its own weak-link probability p ~ U(0, weak_s_prob_max)
     (heterogeneous network quality across the fleet), Bernoulli weak-node
     flags under that p, a weak-edge flag, a user count in
-    [n_users_min, n_users_max], and a constraint from the Table-V levels.
+    [n_users_min, n_users_max], a constraint from the Table-V levels, and
+    a latency target from ``latency_pool`` (default
+    ``specs.observation.LATENCY_TARGET_POOL``) — the (L, A) cell the
+    "constraint" observation block conditions the policy on.
+
+    ``cells_per_edge > 1`` co-locates consecutive cells on one edge server
+    (``edge_group = cell // cells_per_edge``) for the ``shared_edge``
+    coupling; the default keeps every cell on its own edge.
     """
     n_users_max = n_max if n_users_max is None else n_users_max
     if constraint_pool is None:
         constraint_pool = [CONSTRAINTS[c] for c in CONSTRAINT_ORDER]
-    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    if latency_pool is None:
+        latency_pool = LATENCY_TARGET_POOL
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
     p_cell = jax.random.uniform(k1, (n_cells, 1)) * weak_s_prob_max
     weak_s = jax.random.uniform(k2, (n_cells, n_max)) < p_cell
     weak_e = jax.random.uniform(k3, (n_cells,)) < weak_e_prob
@@ -100,11 +135,16 @@ def random_fleet(key, n_cells: int, n_max: int = 5, *,
                                  n_users_max + 1, jnp.int32)
     pool = jnp.asarray(np.array(constraint_pool, np.float32))
     constraint = pool[jax.random.randint(k5, (n_cells,), 0, len(pool))]
+    lat_pool = jnp.asarray(np.array(latency_pool, np.float32))
+    latency = lat_pool[jax.random.randint(k6, (n_cells,), 0, len(lat_pool))]
+    edge_group = (jnp.arange(n_cells, dtype=jnp.int32)
+                  // max(1, cells_per_edge))
     # weak_s is sampled for every slot, including ones beyond the cell's
     # current n_users: the env masks inactive slots itself, and keeping the
     # flags means Poisson replay that raises n_users activates users whose
     # link quality still follows the cell's weak-link probability.
-    return FleetScenario(weak_s, weak_e, n_users, constraint)
+    return FleetScenario(weak_s, weak_e, n_users, constraint,
+                         latency_target=latency, edge_group=edge_group)
 
 
 def curriculum_fleets(key, n_cells: int, epochs: int, *, start: int = 2,

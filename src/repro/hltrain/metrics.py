@@ -30,7 +30,7 @@ from repro.env.edge_cloud import (PENALTY_BASE, PENALTY_PER_PCT,
                                   REWARD_SCALE)
 from repro.fleet.env import FleetConfig
 from repro.fleet.evaluate import make_greedy_evaluator
-from repro.fleet.solver import solve_optimal
+from repro.fleet.solver import solve_fleet
 from repro.fleet.workload import FleetScenario
 from repro.hltrain.trainer import FleetHLParams, session_schedule
 
@@ -52,9 +52,7 @@ def real_step_budget(hp: FleetHLParams, n_cells: int,
 def optimal_rewards(scenario: FleetScenario) -> np.ndarray:
     """(C,) exact per-cell optimum reward −ART*/100 via ``fleet.solver``
     (the optimum is feasible by construction, so no penalty term)."""
-    return np.array([
-        -solve_optimal(*scenario.cell(i))["art"] / REWARD_SCALE
-        for i in range(scenario.n_cells)])
+    return -solve_fleet(scenario)["art"] / REWARD_SCALE
 
 
 def reward_from_round(art: np.ndarray, acc: np.ndarray,

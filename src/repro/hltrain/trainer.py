@@ -151,12 +151,14 @@ def make_hl_trainer(cfg: FleetConfig, hp: FleetHLParams = None,
                     ) -> FleetHLTrainer:
     hp = hp or FleetHLParams()
     env = make_fleet_env(cfg)
-    state_dim = cfg.state_dim
+    # observation width/normalization comes from the spec, never hard-coded
+    spec = cfg.spec()
+    state_dim = spec.dim
     n_actions = latency.N_ACTIONS
     dqn_init, _, dqn_update, dqn_sync, _ = make_dqn(
-        state_dim, n_actions, hidden=hp.hidden, lr=hp.lr, gamma=hp.gamma)
+        spec, n_actions, hidden=hp.hidden, lr=hp.lr, gamma=hp.gamma)
     sm_init, _, sm_predict_all, sm_update = make_system_model(
-        state_dim, n_actions, lr=hp.model_lr)
+        spec, n_actions, lr=hp.model_lr)
 
     # ---------------------------------------------------------------- init
     def init(key, scenario: FleetScenario) -> HLTrainState:

@@ -10,7 +10,9 @@ user-count *curriculum* 2 → n_max of random topologies, one stage per
 epoch chunk):
 
     PYTHONPATH=src python -m repro.launch.rl_train --algo HL --fleet \
-        --cells 256 --n-max 8 --epochs 60 [--no-curriculum] [--shared-cloud]
+        --cells 256 --n-max 8 --epochs 60 [--no-curriculum] \
+        [--obs-spec base|contention|constraint|full] \
+        [--shared-cloud] [--shared-edge] [--cells-per-edge 4]
 """
 from __future__ import annotations
 
@@ -26,6 +28,7 @@ from repro.core.baselines import DQLAgent, QLAgent
 from repro.env.edge_cloud import (EdgeCloudEnv, EnvConfig,
                                   brute_force_optimal, decision_string)
 from repro.env.scenarios import SCENARIOS, CONSTRAINTS
+from repro.specs.observation import SPEC_NAMES
 
 
 def run_fleet(args):
@@ -35,7 +38,10 @@ def run_fleet(args):
     from repro.hltrain import (FleetHLParams, make_hl_trainer,
                                evaluate_vs_solver)
 
-    cfg = FleetConfig(n_max=args.n_max, shared_cloud=args.shared_cloud)
+    cfg = FleetConfig(n_max=args.n_max, shared_cloud=args.shared_cloud,
+                      shared_edge=args.shared_edge,
+                      obs_spec=args.obs_spec)
+    fleet_kw = dict(cells_per_edge=args.cells_per_edge)
     # buffers must hold at least one fleet-wide batched write per step
     hp = FleetHLParams(seed=args.seed, epochs=args.epochs,
                        plan_cap=max(4096, args.cells),
@@ -49,11 +55,12 @@ def run_fleet(args):
     n_stages = -(-args.epochs // chunk)  # ceil
     if args.curriculum:
         stages = curriculum_fleets(k_fleet, args.cells, n_stages,
-                                   start=2, end=args.n_max)
+                                   start=2, end=args.n_max, **fleet_kw)
     else:
-        stages = [random_fleet(k_fleet, args.cells, n_max=args.n_max)
-                  ] * n_stages
+        stages = [random_fleet(k_fleet, args.cells, n_max=args.n_max,
+                               **fleet_kw)] * n_stages
     print(f"fleet training: {args.cells} cells × n_max={args.n_max}, "
+          f"obs spec '{cfg.obs_spec}' ({cfg.spec().describe()}), "
           f"{args.epochs} epochs in {n_stages} stages "
           f"({'curriculum 2→' + str(args.n_max) if args.curriculum else 'fixed fleet'})")
 
@@ -88,7 +95,7 @@ def run_fleet(args):
           f"(gap {final['mean_reward_gap']:.1%}, "
           f"violations {final['violation_rate']:.1%})")
     held = random_fleet(jax.random.PRNGKey(args.seed + 1234), args.cells,
-                        n_max=args.n_max)
+                        n_max=args.n_max, **fleet_kw)
     gen = evaluate_vs_solver(state.dqn.params, held, cfg, key=k_eval)
     print(f"held-out fleet:   mean reward {gen['mean_policy_reward']:.4f} "
           f"vs optimal {gen['mean_opt_reward']:.4f} "
@@ -123,11 +130,24 @@ def main():
                          "2→n_max user-count curriculum")
     ap.add_argument("--shared-cloud", action="store_true",
                     help="couple cells through a shared cloud pool")
+    ap.add_argument("--shared-edge", action="store_true",
+                    help="couple co-located cells through shared edge "
+                         "servers (see --cells-per-edge)")
+    ap.add_argument("--cells-per-edge", type=int, default=1,
+                    help="cells co-located per edge server group "
+                         "(1 = every cell on its own edge)")
+    ap.add_argument("--obs-spec", choices=SPEC_NAMES, default="base",
+                    help="observation spec variant "
+                         "(repro.specs.observation)")
     args = ap.parse_args()
 
     if args.fleet:
         if args.algo != "HL":
             ap.error("--fleet currently supports --algo HL only")
+        if args.shared_edge and args.cells_per_edge <= 1:
+            ap.error("--shared-edge needs --cells-per-edge > 1: with one "
+                     "cell per edge server every group is a singleton and "
+                     "the coupling is identically zero")
         return run_fleet(args)
 
     def env(seed):

@@ -1,0 +1,12 @@
+"""Shared cross-layer specifications (observation layout, …)."""
+from repro.specs.observation import (ObservationSpec, ObsInputs, Block,
+                                     BLOCKS, SPEC_VARIANTS, SPEC_NAMES,
+                                     make_spec, spec_dim,
+                                     DEFAULT_LATENCY_TARGET_MS,
+                                     LATENCY_TARGET_POOL)
+
+__all__ = [
+    "ObservationSpec", "ObsInputs", "Block", "BLOCKS",
+    "SPEC_VARIANTS", "SPEC_NAMES", "make_spec", "spec_dim",
+    "DEFAULT_LATENCY_TARGET_MS", "LATENCY_TARGET_POOL",
+]

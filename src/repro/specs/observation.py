@@ -1,0 +1,240 @@
+"""ObservationSpec — the single source of truth for observation layout.
+
+Before this module, the Table-II observation layout was duplicated and
+hard-coded in four layers (``env/edge_cloud.py``, ``fleet/env.py``, the
+DQN input dims in ``core/``, and ``hltrain/trainer.py``).  Now every layer
+derives it from one ``ObservationSpec``: an ordered tuple of *feature
+blocks*, each defined once with a numpy encoder (for the Python
+``EdgeCloudEnv``) and a jnp encoder (for the jitted ``FleetEnv``) that are
+test-enforced equal to 1e-5 over randomized states.
+
+Blocks
+------
+
+``base``        the paper's Table-II state: requesting-user one-hot,
+                per-slot busy/weak flags, 9-level edge/cloud occupancy,
+                edge busy/weak flags, plus the round context (accuracy
+                committed so far, round progress).  The round context is
+                what keeps the MDP Markovian: the round-average accuracy
+                term in the reward means user i's Q-values cannot
+                anticipate the terminal constraint penalty unless the
+                state carries the accuracy already committed this round.
+                Width 4·n_max + 8 — bit-compatible with the pre-spec
+                layout, so ``base``-spec checkpoints are interchangeable
+                with old ones.
+``cloud_load``  fleet-wide mean cloud occupancy (requests per cell across
+                *all* cells, incl. background).  This is the ROADMAP's
+                "cloud-capacity term": with ``FleetConfig.shared_cloud``
+                the cloud is one pool, and this is the signal a policy
+                needs to *react* to fleet-wide load.  Width 1.
+``edge_load``   mean edge occupancy over the cell's ``shared_edge`` group
+                (cells co-located on one edge server).  Width 1.
+``constraint``  the cell's (L, A) constraint targets: accuracy threshold
+                (%) and latency target (ms), normalized.  Conditioning the
+                policy on its constraint cell is what lets one network
+                generalize across constraint levels (cf. Sohaib et al.,
+                arXiv 2402.11743, deadline-conditioned offloading).
+                Width 2.
+
+Variants (``SPEC_VARIANTS``): ``base`` (Table II only), ``contention``
+(+cloud_load +edge_load), ``constraint`` (+constraint), ``full`` (all).
+
+Encoders consume an ``ObsInputs`` of *semantic* quantities (occupancies,
+committed accuracy, constraint targets) that the env computes; the spec
+owns layout, widths, ordering, and normalization constants.  Environments
+and trainers must never hard-code an observation dim — use ``spec.dim``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Normalization constants (single definition; encoders and any consumer
+# that needs to undo them import from here).
+OCC_LEVELS = 8.0            # Table-II 9-level occupancy clip (0..8)
+LOAD_CAP = 8.0              # cap for the per-cell mean load features
+ACC_NORM = 100.0            # accuracy features are % / 100
+LATENCY_NORM = 1000.0       # latency-target feature is ms / 1000
+DEFAULT_LATENCY_TARGET_MS = 400.0
+# Per-cell latency-target pool for procedural fleets (ms), spanning the
+# Table-V optimum range (~70 ms unconstrained to ~500 ms at Max).
+LATENCY_TARGET_POOL = (150.0, 250.0, 400.0, 600.0, 800.0)
+
+
+class ObsInputs(NamedTuple):
+    """Semantic observation inputs, env-agnostic.
+
+    Single-cell (numpy encoders): scalars + ``(n_max,)`` arrays.
+    Fleet (jnp encoders): ``(C,)`` + ``(C, n_max)`` stacked arrays.
+
+    Occupancies (``k_edge``/``k_cloud``) arrive *fully resolved* — they
+    include background occupancy and any shared-cloud / shared-edge
+    coupling the env applies — so the spec only encodes, never simulates.
+    """
+    user: object          # requesting-user cursor
+    n_users: object       # real users this round
+    busy_p_s: object      # (n_max,) per-slot CPU-busy flags
+    busy_m_s: object      # (n_max,) per-slot memory-busy flags
+    weak_s: object        # (n_max,) per-slot weak-link flags
+    weak_e: object        # weak-edge flag
+    busy_m_e: object      # edge memory-busy flag
+    busy_m_c: object      # cloud memory-busy flag
+    k_edge: object        # edge occupancy (incl. bg + coupling)
+    k_cloud: object       # cloud occupancy (incl. bg + coupling)
+    acc_sum: object       # accuracy (%) committed so far this round
+    cloud_fleet: object   # fleet-wide mean cloud occupancy per cell
+    edge_group: object    # edge-group mean edge occupancy
+    constraint: object    # accuracy threshold (%)
+    latency_target: object  # latency target (ms)
+
+
+# ------------------------------------------------------------------ blocks
+def _base_np(x: ObsInputs, n_max: int) -> np.ndarray:
+    onehot = np.zeros(n_max)
+    u = int(x.user)
+    if u < n_max:
+        onehot[u] = 1.0
+    n = float(x.n_users)
+    return np.concatenate([
+        onehot,
+        np.asarray(x.busy_p_s, float),
+        np.asarray(x.busy_m_s, float),
+        np.asarray(x.weak_s, float),
+        [min(float(x.k_edge), OCC_LEVELS) / OCC_LEVELS,
+         float(x.busy_m_e), float(x.weak_e)],
+        [min(float(x.k_cloud), OCC_LEVELS) / OCC_LEVELS,
+         float(x.busy_m_c), float(x.weak_e)],
+        [float(x.acc_sum) / (ACC_NORM * n), u / n],
+    ])
+
+
+def _base_jnp(x: ObsInputs, n_max: int) -> jnp.ndarray:
+    n = jnp.asarray(x.n_users).astype(jnp.float32)[:, None]
+    col = lambda v: jnp.asarray(v).astype(jnp.float32)[:, None]
+    weak_e = col(x.weak_e)
+    return jnp.concatenate([
+        jax.nn.one_hot(x.user, n_max),
+        jnp.asarray(x.busy_p_s).astype(jnp.float32),
+        jnp.asarray(x.busy_m_s).astype(jnp.float32),
+        jnp.asarray(x.weak_s).astype(jnp.float32),
+        jnp.minimum(col(x.k_edge), OCC_LEVELS) / OCC_LEVELS,
+        col(x.busy_m_e), weak_e,
+        jnp.minimum(col(x.k_cloud), OCC_LEVELS) / OCC_LEVELS,
+        col(x.busy_m_c), weak_e,
+        col(x.acc_sum) / (ACC_NORM * n),
+        col(x.user) / n,
+    ], axis=-1)
+
+
+def _cloud_load_np(x: ObsInputs, n_max: int) -> np.ndarray:
+    return np.array([min(float(x.cloud_fleet), LOAD_CAP) / LOAD_CAP])
+
+
+def _cloud_load_jnp(x: ObsInputs, n_max: int) -> jnp.ndarray:
+    v = jnp.asarray(x.cloud_fleet).astype(jnp.float32)[:, None]
+    return jnp.minimum(v, LOAD_CAP) / LOAD_CAP
+
+
+def _edge_load_np(x: ObsInputs, n_max: int) -> np.ndarray:
+    return np.array([min(float(x.edge_group), LOAD_CAP) / LOAD_CAP])
+
+
+def _edge_load_jnp(x: ObsInputs, n_max: int) -> jnp.ndarray:
+    v = jnp.asarray(x.edge_group).astype(jnp.float32)[:, None]
+    return jnp.minimum(v, LOAD_CAP) / LOAD_CAP
+
+
+def _constraint_np(x: ObsInputs, n_max: int) -> np.ndarray:
+    return np.array([float(x.constraint) / ACC_NORM,
+                     float(x.latency_target) / LATENCY_NORM])
+
+
+def _constraint_jnp(x: ObsInputs, n_max: int) -> jnp.ndarray:
+    col = lambda v: jnp.asarray(v).astype(jnp.float32)[:, None]
+    return jnp.concatenate([col(x.constraint) / ACC_NORM,
+                            col(x.latency_target) / LATENCY_NORM], axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    name: str
+    width: Callable[[int], int]      # n_max -> feature count
+    encode_np: Callable[[ObsInputs, int], np.ndarray]
+    encode_jnp: Callable[[ObsInputs, int], jnp.ndarray]
+
+
+BLOCKS: dict[str, Block] = {
+    "base": Block("base", lambda n: 4 * n + 8, _base_np, _base_jnp),
+    "cloud_load": Block("cloud_load", lambda n: 1,
+                        _cloud_load_np, _cloud_load_jnp),
+    "edge_load": Block("edge_load", lambda n: 1,
+                       _edge_load_np, _edge_load_jnp),
+    "constraint": Block("constraint", lambda n: 2,
+                        _constraint_np, _constraint_jnp),
+}
+
+SPEC_VARIANTS: dict[str, tuple[str, ...]] = {
+    "base": ("base",),
+    "contention": ("base", "cloud_load", "edge_load"),
+    "constraint": ("base", "constraint"),
+    "full": ("base", "cloud_load", "edge_load", "constraint"),
+}
+SPEC_NAMES = tuple(SPEC_VARIANTS)
+
+
+@dataclasses.dataclass(frozen=True)
+class ObservationSpec:
+    """Ordered feature-block composition for one observation width."""
+    name: str
+    n_max: int
+    blocks: tuple[str, ...]
+
+    @property
+    def dim(self) -> int:
+        return sum(BLOCKS[b].width(self.n_max) for b in self.blocks)
+
+    def block_slices(self) -> dict[str, slice]:
+        """Feature-index slice of every block (for probing / debugging)."""
+        out, lo = {}, 0
+        for b in self.blocks:
+            hi = lo + BLOCKS[b].width(self.n_max)
+            out[b] = slice(lo, hi)
+            lo = hi
+        return out
+
+    def encode_np(self, x: ObsInputs) -> np.ndarray:
+        """Single-cell observation, numpy. Returns (dim,) float32."""
+        return np.concatenate([
+            BLOCKS[b].encode_np(x, self.n_max) for b in self.blocks
+        ]).astype(np.float32)
+
+    def encode_jnp(self, x: ObsInputs) -> jnp.ndarray:
+        """Batched observation, jnp. Returns (C, dim) float32 (traceable)."""
+        return jnp.concatenate([
+            BLOCKS[b].encode_jnp(x, self.n_max) for b in self.blocks
+        ], axis=-1).astype(jnp.float32)
+
+    def describe(self) -> str:
+        parts = ", ".join(f"{b}[{BLOCKS[b].width(self.n_max)}]"
+                          for b in self.blocks)
+        return f"{self.name}(n_max={self.n_max}, dim={self.dim}: {parts})"
+
+
+def make_spec(name: str, n_max: int) -> ObservationSpec:
+    """Spec by variant name (``base|contention|constraint|full``)."""
+    if name not in SPEC_VARIANTS:
+        raise ValueError(f"unknown observation spec {name!r}; "
+                         f"choose from {SPEC_NAMES}")
+    return ObservationSpec(name, n_max, SPEC_VARIANTS[name])
+
+
+def spec_dim(spec_or_dim) -> int:
+    """Input width from an ``ObservationSpec`` or a plain int — the one
+    place networks/buffers resolve their input dimension."""
+    if isinstance(spec_or_dim, ObservationSpec):
+        return spec_or_dim.dim
+    return int(spec_or_dim)

@@ -173,6 +173,94 @@ def test_greedy_evaluator_vs_solver_optimum():
     assert np.all(art[~violated] >= opt[~violated] - 1e-3)
 
 
+# ----------------------------------------------------- shared-edge coupling
+def test_group_occupancy_conservation():
+    """Per-group occupancy is conserved: the segment-sum path equals the
+    dense per-group slot mask, and own + coupling == group total."""
+    rng = np.random.default_rng(0)
+    groups = jnp.asarray(rng.integers(0, 5, 16), jnp.int32)
+    own = jnp.asarray(rng.integers(0, 4, 16), jnp.int32)
+    total = fl.group_occupancy(own, groups)
+    dense = fl.group_slot_mask(groups) @ own
+    np.testing.assert_array_equal(np.asarray(total), np.asarray(dense))
+    np.testing.assert_array_equal(
+        np.asarray(fl.group_coupling(own, groups) + own),
+        np.asarray(total))
+    # every group's total is the sum of its members' own occupancy
+    for g in range(5):
+        members = np.asarray(groups) == g
+        if members.any():
+            assert np.all(np.asarray(total)[members]
+                          == np.asarray(own)[members].sum())
+
+
+def test_shared_edge_singleton_groups_parity():
+    """With singleton edge groups (the scenario default) the coupling is
+    identically zero: trajectories match the uncoupled env bit-for-bit."""
+    scn = random_fleet(jax.random.PRNGKey(4), 4, n_max=5, n_users_min=5)
+    assert scn.edge_group is not None  # sampled, 1 cell per edge
+    e0 = make_fleet_env(FleetConfig(n_max=5, quiet=True))
+    e1 = make_fleet_env(FleetConfig(n_max=5, quiet=True, shared_edge=True))
+    s0 = e0.init(jax.random.PRNGKey(0), scn)
+    s1 = e1.init(jax.random.PRNGKey(0), scn)
+    rng = np.random.default_rng(5)
+    for _ in range(12):
+        a = jnp.asarray(rng.integers(0, lm.N_ACTIONS, 4), jnp.int32)
+        s0, o0, r0, d0, _ = e0.step(scn, s0, a)
+        s1, o1, r1, d1, _ = e1.step(scn, s1, a)
+        np.testing.assert_array_equal(np.asarray(o0), np.asarray(o1))
+        np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
+
+
+def test_shared_edge_couples_colocated_cells():
+    """Two cells on one edge server see each other's edge occupancy."""
+    scn = random_fleet(jax.random.PRNGKey(1), 2, n_max=5, n_users_min=5,
+                       weak_s_prob_max=0.0, weak_e_prob=0.0,
+                       cells_per_edge=2)
+    a_edge = jnp.full(2, lm.A_EDGE, jnp.int32)
+    for shared, expect_k in ((False, 1), (True, 2)):
+        env = make_fleet_env(FleetConfig(n_max=5, quiet=True,
+                                         shared_edge=shared))
+        st = env.init(jax.random.PRNGKey(2), scn)
+        st, _, _, _, info = env.step(scn, st, a_edge)
+        np.testing.assert_allclose(np.asarray(info["t_ms"]),
+                                   lm.T_EDGE_D0 * expect_k)
+
+
+def test_shared_edge_off_by_default():
+    assert FleetConfig().shared_edge is False
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.integers(0, lm.N_ACTIONS - 1), min_size=10,
+                    max_size=10),
+           st.integers(0, 4), st.integers(0, 2 ** 31 - 1))
+    def test_property_colocated_load_never_improves_latency(
+            acts, flip_slot, seed):
+        """Adding edge load to one cell never *improves* a co-located
+        cell's latency: flipping any of cell A's decisions to the edge
+        tier can only raise (never lower) cell B's round time."""
+        scn = random_fleet(jax.random.PRNGKey(seed % 1000), 2, n_max=5,
+                           n_users_min=5, cells_per_edge=2)
+        env = make_fleet_env(FleetConfig(n_max=5, quiet=True,
+                                         shared_edge=True))
+        base = np.asarray(acts, np.int64).reshape(2, 5)
+        more = base.copy()
+        more[0, flip_slot] = lm.A_EDGE  # cell A pushes one request to edge
+        arts = []
+        for joint in (base, more):
+            st_ = env.init(jax.random.PRNGKey(0), scn)
+            _, traj = env.rollout(scn, st_,
+                                  jnp.asarray(joint.T, jnp.int32))
+            arts.append(float(np.asarray(traj["art"])[-1, 1]))  # cell B
+        assert arts[1] >= arts[0] - 1e-6
+except ImportError:  # pragma: no cover - hypothesis is optional
+    pass
+
+
 # ---------------------------------------------------------------- workload
 def test_random_fleet_well_formed():
     scn = random_fleet(jax.random.PRNGKey(9), 128, n_max=32,

@@ -214,6 +214,27 @@ def test_parity_reward_band_vs_python_agent_1cell():
         hp, n_cells=1)["direct_steps"]
 
 
+# ---------------------------------------------------- observation specs
+def test_trainer_derives_dims_from_spec_full():
+    """Every trainer width (obs, buffers, nets) comes from the spec: a
+    ``full``-spec config with both couplings trains end to end and its
+    device state is spec-sized — no hard-coded Table-II dims anywhere."""
+    cfg = FleetConfig(n_max=4, obs_spec="full", shared_cloud=True,
+                      shared_edge=True)
+    hp = _tiny_hp(epochs=2, batch=16)
+    trainer = make_hl_trainer(cfg, hp)
+    scn = random_fleet(jax.random.PRNGKey(0), 8, n_max=4, n_users_min=2,
+                       cells_per_edge=4)
+    state = trainer.init(jax.random.PRNGKey(1), scn)
+    assert state.obs.shape == (8, cfg.state_dim)
+    assert state.d_direct.ring.s.shape[1] == cfg.state_dim
+    assert state.dqn.params[0]["w"].shape[0] == cfg.state_dim
+    state, _ = trainer.run(state, scn, 0, 2)
+    assert int(state.real_steps) > 0
+    ev = evaluate_vs_solver(state.dqn.params, scn, cfg)
+    assert 0.0 <= ev["violation_rate"] <= 1.0
+
+
 # ------------------------------------------------------------ shared cloud
 def test_shared_cloud_single_cell_parity():
     """With one cell the coupling term is identically zero: trajectories
