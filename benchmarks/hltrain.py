@@ -49,7 +49,8 @@ from repro.fleet import FleetConfig, from_table4, random_fleet, \
     curriculum_fleets
 from repro.fleet.workload import FleetScenario
 from repro.hltrain import (FleetHLParams, make_hl_trainer,
-                           evaluate_vs_solver, optimal_rewards)
+                           evaluate_vs_solver, optimal_rewards,
+                           run_curriculum)
 
 CONV_SCENARIO, CONV_CONSTRAINT = "B", "85%"  # the n=5 convergence target
 GEN_N_MAX = 32  # held-out generalization fleet size (ROADMAP item)
@@ -169,15 +170,9 @@ def bench_generalization(hp: FleetHLParams, n_cells: int, chunk: int,
     for spec in specs:
         cfg = FleetConfig(n_max=GEN_N_MAX, obs_spec=spec)
         trainer = make_hl_trainer(cfg, hp)
-        state = trainer.init(jax.random.PRNGKey(0), stages[0])
         t0 = time.perf_counter()
-        for s, scn in enumerate(stages):
-            if s:
-                state = trainer.resume(state, scn)
-            start = s * chunk
-            n = min(chunk, hp.epochs - start)
-            state, _ = jax.block_until_ready(
-                trainer.run(state, scn, start, n))
+        state = run_curriculum(trainer, stages, hp.epochs, chunk,
+                               jax.random.PRNGKey(0))
         wall = time.perf_counter() - t0
         ev = evaluate_vs_solver(state.dqn.params, held, cfg,
                                 opt_reward=held_opt)

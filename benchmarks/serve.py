@@ -1,0 +1,143 @@
+"""Served-traffic benchmark: PolicyBundles through the trace-driven fleet
+serving gateway.
+
+    PYTHONPATH=src python -m benchmarks.serve [--smoke]
+        [--cells 64] [--rounds 40] [--out BENCH_serve.json]
+
+End-to-end exercise of the Unified Policy API: train a fleet policy with
+``repro.hltrain``, save it as a versioned PolicyBundle, load the bundle
+back, and replay an open-loop Poisson round trace through
+``repro.launch.serve_fleet`` — alongside the parameter-free latency-greedy
+baseline bundle, both scored against the exact ``fleet.solver`` oracle on
+the *same* fleet and trace.
+
+Writes ``BENCH_serve.json``: per-policy served-traffic ``violation_rate``
+(the serving acceptance metric), request-weighted ART vs the solver
+optimum, paper reward, and steady-state gateway ``decisions_per_s``.
+``--smoke`` shrinks training to a minutes-scale CI job and marks the JSON
+``smoke: true``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from repro.fleet import FleetConfig, curriculum_fleets, random_fleet
+from repro.fleet.workload import poisson_round_trace
+from repro.hltrain import FleetHLParams, make_hl_trainer, run_curriculum
+from repro.launch.serve_fleet import replay_trace
+from repro.policy import (PolicyBundle, heuristic_greedy_policy,
+                          load_bundle, policy_from_bundle, save_bundle,
+                          solve_oracle)
+
+N_MAX = 5
+OBS_SPEC = "full"
+
+
+def train_hltrain_bundle(path: str, cells: int, hp: FleetHLParams,
+                         chunk: int) -> None:
+    """Tiny curriculum training run -> PolicyBundle on disk."""
+    cfg = FleetConfig(n_max=N_MAX, obs_spec=OBS_SPEC)
+    trainer = make_hl_trainer(cfg, hp)
+    n_stages = -(-hp.epochs // chunk)  # ceil
+    stages = curriculum_fleets(jax.random.PRNGKey(7), cells, n_stages,
+                               start=2, end=N_MAX)
+    state = run_curriculum(trainer, stages, hp.epochs, chunk,
+                           jax.random.PRNGKey(8))
+    save_bundle(path, PolicyBundle(
+        kind="dqn", obs_spec=OBS_SPEC, n_max=N_MAX,
+        params=state.dqn.params,
+        meta={"trainer": "hltrain-fleet", "cells": cells,
+              "epochs": hp.epochs,
+              "real_steps": int(state.real_steps)}))
+
+
+def save_greedy_bundle(path: str) -> None:
+    policy = heuristic_greedy_policy(N_MAX)
+    save_bundle(path, PolicyBundle(
+        kind="greedy", obs_spec=OBS_SPEC, n_max=N_MAX,
+        params=policy.init(jax.random.PRNGKey(0))))
+
+
+def main(smoke: bool = False, cells: int = 64, rounds: int = 40,
+         rate: float = 3.0, workdir: str = "results/serve",
+         out: str = "BENCH_serve.json") -> dict:
+    if smoke:
+        cells, rounds = min(cells, 32), min(rounds, 25)
+        hp = FleetHLParams(epochs=8, n_direct=4, t_direct=6, n_world=8,
+                           n_suggest=2, t_suggest=3, n_plan=8, batch=64,
+                           eps_decay_steps=300, updates_per_direct=4,
+                           updates_per_plan=4)
+        chunk = 4
+    else:
+        hp = FleetHLParams(epochs=60, eps_decay_steps=2000,
+                           updates_per_direct=6, updates_per_plan=6)
+        chunk = 10
+
+    os.makedirs(workdir, exist_ok=True)
+    bundles = {"greedy": os.path.join(workdir, "greedy.bundle.msgpack"),
+               "hltrain": os.path.join(workdir, "hltrain.bundle.msgpack")}
+    print(f"— training hltrain policy ({cells} cells, {hp.epochs} epochs, "
+          f"obs spec {OBS_SPEC!r}) —")
+    train_hltrain_bundle(bundles["hltrain"], cells, hp, chunk)
+    save_greedy_bundle(bundles["greedy"])
+
+    # one shared serving fleet + trace + solver-oracle tables: every
+    # bundle answers the same open-loop traffic
+    k_fleet, k_trace, k_serve = jax.random.split(jax.random.PRNGKey(42), 3)
+    scenario = random_fleet(k_fleet, cells, n_max=N_MAX)
+    trace = poisson_round_trace(k_trace, scenario, rounds, rate=rate)
+    oracle = solve_oracle(scenario)
+    cfg = FleetConfig(n_max=N_MAX, obs_spec=OBS_SPEC)
+
+    policies = {}
+    for name, path in bundles.items():
+        bundle = load_bundle(path, expect_spec=OBS_SPEC,
+                             expect_n_max=N_MAX)
+        policy, params = policy_from_bundle(bundle)
+        rep = replay_trace(policy, params, scenario, trace, cfg,
+                           key=k_serve, oracle=oracle)
+        policies[name] = {
+            "violation_rate": rep["violation_rate"],
+            "mean_art_ms": round(rep["mean_art_ms"], 2),
+            "opt_art_ms": round(rep["opt_art_ms"], 2),
+            "mean_reward": round(rep["mean_reward"], 4),
+            "opt_reward": round(rep["opt_reward"], 4),
+            "served_requests": rep["served_requests"],
+            "decisions_per_s": round(rep["decisions_per_s"], 1),
+        }
+        print(f"— {name}-bundle served {rep['served_requests']:,} requests: "
+              f"ART {rep['mean_art_ms']:.1f} ms "
+              f"(opt {rep['opt_art_ms']:.1f}), violations "
+              f"{rep['violation_rate']:.1%}, "
+              f"{rep['decisions_per_s']:,.0f} decisions/s —")
+
+    result = {
+        "smoke": smoke,
+        "n_cells": cells, "n_rounds": rounds, "rate": rate,
+        "n_max": N_MAX, "obs_spec": OBS_SPEC,
+        "policies": policies,
+        "decisions_per_s": max(p["decisions_per_s"]
+                               for p in policies.values()),
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print("wrote", out)
+    return result
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="minutes-scale CI config")
+    p.add_argument("--cells", type=int, default=64)
+    p.add_argument("--rounds", type=int, default=40)
+    p.add_argument("--rate", type=float, default=3.0)
+    p.add_argument("--workdir", default="results/serve",
+                   help="where the trained bundles are written")
+    p.add_argument("--out", default="BENCH_serve.json")
+    a = p.parse_args()
+    main(a.smoke, a.cells, a.rounds, a.rate, a.workdir, a.out)

@@ -46,7 +46,7 @@ def main(constraint: str = "89%", n_users: int = 5,
     for sc in "ABCD":
         env = EdgeCloudEnv(EnvConfig(SCENARIOS[sc], CONSTRAINTS[constraint],
                                      n_users=n_users, seed=123))
-        info = env.rollout_greedy(agent.policy_fn)
+        info = env.rollout_greedy(agent.policy, agent.policy_params)
         opt = brute_force_optimal(SCENARIOS[sc], CONSTRAINTS[constraint],
                                   n_users)
         gap = 100 * (info["art"] - opt["art"]) / opt["art"]

@@ -22,7 +22,7 @@ import numpy as np
 from repro.env.edge_cloud import REWARD_SCALE
 from repro.fleet import FleetConfig, curriculum_fleets, random_fleet
 from repro.hltrain import (FleetHLParams, make_hl_trainer,
-                           evaluate_vs_solver)
+                           evaluate_vs_solver, run_curriculum)
 from repro.specs.observation import SPEC_NAMES
 
 
@@ -39,17 +39,16 @@ def main(obs_spec: str = "base"):
           f"{n_cells} cells, users 2 → {n_max}, "
           f"obs spec {cfg.spec().describe()}")
 
-    state = trainer.init(jax.random.PRNGKey(1), stages[0])
-    t0 = time.time()
-    for s, scn in enumerate(stages):
-        if s:
-            state = trainer.resume(state, scn)
-        state, m = trainer.run(state, scn, s * chunk, chunk)
+    def on_stage(s, scn, state, m):
         print(f"stage {s + 1}: mean reward "
               f"{float(np.asarray(m['mean_reward'])[-1]):+.3f}, "
               f"ε {float(np.asarray(m['epsilon'])[-1]):.2f}, "
               f"{int(state.real_steps):,} real steps "
               f"({int(state.verify_steps):,} planning verifications)")
+
+    t0 = time.time()
+    state = run_curriculum(trainer, stages, epochs, chunk,
+                           jax.random.PRNGKey(1), on_stage)
     wall = time.time() - t0
     print(f"trained in {wall:.0f}s ({int(state.real_steps) / wall:,.0f} "
           f"real steps/s incl. compile)")

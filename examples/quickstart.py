@@ -38,7 +38,7 @@ def main():
     print(f"greedy policy: ART={res.final_art:.1f} ms  "
           f"decisions={decision_string(res.final_actions)}")
 
-    io = IntelligentOrchestrator(env, agent.policy_fn)
+    io = IntelligentOrchestrator(env, agent.policy, agent.policy_params)
     print("\nper-request orchestration decisions:")
     for d in io.decide_round():
         print(f"  user S{d.user + 1}: tier={d.tier:6s} variant=d{d.variant} "

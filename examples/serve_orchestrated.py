@@ -50,7 +50,7 @@ def main():
           f"ART {res.final_art:.1f} ms")
 
     print("\n=== 2. orchestrated serving round ===")
-    io = IntelligentOrchestrator(env, agent.policy_fn)
+    io = IntelligentOrchestrator(env, agent.policy, agent.policy_params)
     decisions = io.decide_round()
     pool = build_variant_pool(jax.random.PRNGKey(1))
     variant_of = {0: "d0-full", 1: "d0-full", 2: "d2-half", 3: "d2-half",

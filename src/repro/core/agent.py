@@ -34,6 +34,8 @@ from repro.core.system_model import make_system_model
 from repro.core.replay import (ReplayBuffer, PrioritizedReplayBuffer,
                                PlanBuffer)
 from repro.env.edge_cloud import EdgeCloudEnv, brute_force_optimal
+from repro.policy.adapters import dqn_policy
+from repro.policy.api import act_single
 
 
 @dataclasses.dataclass
@@ -88,8 +90,8 @@ class ConvergenceTracker:
         self.first_hit_steps: Optional[int] = None
         self.history: list = []
 
-    def check(self, real_steps: int, policy_fn) -> bool:
-        info = self.env.rollout_greedy(policy_fn)
+    def check(self, real_steps: int, policy, params) -> bool:
+        info = self.env.rollout_greedy(policy, params)
         ok = (not info["violated"] and
               info["art"] <= self.opt_art * (1 + self.rtol) + 1e-9)
         self.history.append((real_steps, info["art"], bool(ok)))
@@ -115,10 +117,13 @@ class HLAgent:
         self.rng = np.random.default_rng(hp.seed)
         key = jax.random.PRNGKey(hp.seed)
         k1, k2 = jax.random.split(key)
-        (self.dqn_init, self.q_values, self.dqn_update, self.dqn_sync,
-         self.act_greedy) = make_dqn(env.spec, env.n_actions,
-                                     hidden=hp.hidden, lr=hp.lr,
-                                     gamma=hp.gamma)
+        (self.dqn_init, self.q_values, self.dqn_update,
+         self.dqn_sync) = make_dqn(env.spec, env.n_actions,
+                                   hidden=hp.hidden, lr=hp.lr,
+                                   gamma=hp.gamma)
+        # the agent's decision surface IS the shared Policy protocol —
+        # evaluation, serving, and bundling all go through it
+        self.policy = dqn_policy(env.spec, env.n_actions, hidden=hp.hidden)
         (self.sm_init, self.sm_predict, self.sm_predict_all,
          self.sm_update) = make_system_model(env.spec, env.n_actions,
                                              lr=hp.model_lr)
@@ -144,10 +149,11 @@ class HLAgent:
     def _act(self, obs) -> int:
         if self.rng.random() < self._epsilon():
             return int(self.rng.integers(self.env.n_actions))
-        return int(self.act_greedy(self.dqn.params, jnp.asarray(obs)))
+        return act_single(self.policy, self.dqn.params, obs)
 
-    def policy_fn(self, obs, _key=None) -> int:
-        return int(self.act_greedy(self.dqn.params, jnp.asarray(obs)))
+    @property
+    def policy_params(self):
+        return self.dqn.params
 
     def _plan_key(self, obs) -> tuple:
         return tuple(np.round(np.asarray(obs), 3).tolist())
@@ -240,7 +246,8 @@ class HLAgent:
                 if session_count % hp.target_sync_every == 0:
                     self.dqn = self.dqn_sync(self.dqn)
                 if session_count % eval_every_sessions == 0:
-                    if tracker.check(self.real_steps, self.policy_fn) and \
+                    if tracker.check(self.real_steps, self.policy,
+                                     self.policy_params) and \
                             stop_on_convergence:
                         return self._result(tracker)
             # ---- (2) System model learning ----
@@ -252,13 +259,14 @@ class HLAgent:
             for _ in range(max(1, int(round((alpha + 1) / 2 * hp.n_plan)))):
                 self._plan_train_session()
             self.dqn = self.dqn_sync(self.dqn)
-            if tracker.check(self.real_steps, self.policy_fn) and \
+            if tracker.check(self.real_steps, self.policy,
+                             self.policy_params) and \
                     stop_on_convergence:
                 return self._result(tracker)
         return self._result(tracker)
 
     def _result(self, tracker: ConvergenceTracker) -> TrainResult:
-        info = self.env.rollout_greedy(self.policy_fn)
+        info = self.env.rollout_greedy(self.policy, self.policy_params)
         res = TrainResult(tracker.converged_at, self.real_steps,
                           tracker.history, info["art"], info["actions"],
                           self.compute_updates)

@@ -21,6 +21,8 @@ from repro.core.agent import (ConvergenceTracker, HLHyperParams, TrainResult)
 from repro.core.dqn import make_dqn
 from repro.core.replay import PrioritizedReplayBuffer
 from repro.env.edge_cloud import EdgeCloudEnv
+from repro.policy.adapters import dqn_policy, obs_table_key, qtable_policy
+from repro.policy.api import act_single
 
 
 class DQLAgent:
@@ -31,10 +33,11 @@ class DQLAgent:
         self.hp = hp or HLHyperParams()
         hp = self.hp
         self.rng = np.random.default_rng(hp.seed)
-        (self.dqn_init, _, self.dqn_update, self.dqn_sync,
-         self.act_greedy) = make_dqn(env.spec, env.n_actions,
-                                     hidden=hp.hidden, lr=hp.lr,
-                                     gamma=hp.gamma)
+        (self.dqn_init, _, self.dqn_update,
+         self.dqn_sync) = make_dqn(env.spec, env.n_actions,
+                                   hidden=hp.hidden, lr=hp.lr,
+                                   gamma=hp.gamma)
+        self.policy = dqn_policy(env.spec, env.n_actions, hidden=hp.hidden)
         self.dqn = self.dqn_init(jax.random.PRNGKey(hp.seed))
         self.buf = PrioritizedReplayBuffer(hp.buffer_cap, env.state_dim,
                                            seed=hp.seed + 1)
@@ -48,8 +51,9 @@ class DQLAgent:
         frac = min(1.0, self.real_steps / hp.eps_decay_steps)
         return hp.eps_start + frac * (hp.eps_end - hp.eps_start)
 
-    def policy_fn(self, obs, _key=None) -> int:
-        return int(self.act_greedy(self.dqn.params, jnp.asarray(obs)))
+    @property
+    def policy_params(self):
+        return self.dqn.params
 
     def train(self, *, tracker: ConvergenceTracker, max_steps: int = 200_000,
               eval_every: int = 100,
@@ -59,7 +63,7 @@ class DQLAgent:
         while self.real_steps < max_steps:
             a = (int(self.rng.integers(self.env.n_actions))
                  if self.rng.random() < self._epsilon()
-                 else self.policy_fn(obs))
+                 else act_single(self.policy, self.dqn.params, obs))
             obs2, r, done, _info = self.env.step(a)
             self.real_steps += 1
             self.exp_time_ms += _info.get("t_ms", 0.0)
@@ -78,10 +82,11 @@ class DQLAgent:
             if self.real_steps % (hp.target_sync_every * 50) == 0:
                 self.dqn = self.dqn_sync(self.dqn)
             if self.real_steps % eval_every == 0:
-                if tracker.check(self.real_steps, self.policy_fn) and \
+                if tracker.check(self.real_steps, self.policy,
+                                 self.policy_params) and \
                         stop_on_convergence:
                     break
-        info = self.env.rollout_greedy(self.policy_fn)
+        info = self.env.rollout_greedy(self.policy, self.policy_params)
         res = TrainResult(tracker.converged_at, self.real_steps,
                           tracker.history, info["art"], info["actions"],
                           self.compute_updates)
@@ -101,13 +106,19 @@ class QLHyperParams:
 
 
 class QLAgent:
-    """Tabular Q-learning baseline (AutoScale-class)."""
+    """Tabular Q-learning baseline (AutoScale-class).
+
+    The table is keyed by the quantized Table-II observation
+    (``policy.adapters.obs_table_key``), so the trained table *is* the
+    params pytree of the shared ``qtable_policy`` adapter — no separate
+    env-private discrete state."""
 
     def __init__(self, env: EdgeCloudEnv, hp: QLHyperParams = None):
         self.env = env
         self.hp = hp or QLHyperParams()
         self.rng = np.random.default_rng(self.hp.seed)
-        self.q: dict[tuple, np.ndarray] = {}
+        self.q: dict[bytes, np.ndarray] = {}
+        self.policy = qtable_policy(env.n_actions)
         self.real_steps = 0
         self.compute_updates = 0
         self.exp_time_ms = 0.0
@@ -125,25 +136,26 @@ class QLAgent:
         frac = min(1.0, self.real_steps / hp.eps_decay_steps)
         return hp.eps_start + frac * (hp.eps_end - hp.eps_start)
 
-    def policy_fn(self, _obs, key) -> int:
-        return int(np.argmax(self._q(key)))
+    @property
+    def policy_params(self):
+        return self.q
 
     def train(self, *, tracker: ConvergenceTracker, max_steps: int = 2_000_000,
               eval_every: int = 2000,
               stop_on_convergence: bool = True) -> TrainResult:
         hp = self.hp
-        self.env.reset()
-        key = self.env.discrete_key()
+        obs = self.env.reset()
+        key = obs_table_key(obs)
         while self.real_steps < max_steps:
             q = self._q(key)
             if self.rng.random() < self._epsilon():
                 a = int(self.rng.integers(self.env.n_actions))
             else:
                 a = int(np.argmax(q))
-            _obs2, r, done, _info = self.env.step(a)
+            obs2, r, done, _info = self.env.step(a)
             self.real_steps += 1
             self.exp_time_ms += _info.get("t_ms", 0.0)
-            key2 = self.env.discrete_key()
+            key2 = obs_table_key(obs2)
             t0 = _time.perf_counter()
             target = r if done else r + hp.gamma * self._q(key2).max()
             q[a] += hp.lr * (target - q[a])
@@ -151,10 +163,11 @@ class QLAgent:
             self.compute_updates += 1
             key = key2
             if self.real_steps % eval_every == 0:
-                if tracker.check(self.real_steps, self.policy_fn) and \
+                if tracker.check(self.real_steps, self.policy,
+                                 self.policy_params) and \
                         stop_on_convergence:
                     break
-        info = self.env.rollout_greedy(self.policy_fn)
+        info = self.env.rollout_greedy(self.policy, self.policy_params)
         res = TrainResult(tracker.converged_at, self.real_steps,
                           tracker.history, info["art"], info["actions"],
                           self.compute_updates)

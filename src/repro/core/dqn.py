@@ -65,8 +65,6 @@ def make_dqn(spec, n_actions: int, *, hidden=(64, 64),
         return state._replace(target_params=jax.tree.map(jnp.copy,
                                                          state.params))
 
-    @jax.jit
-    def act_greedy(params, s):
-        return jnp.argmax(apply_mlp_net(params, s[None]), axis=-1)[0]
-
-    return init, q_values, update, sync_target, act_greedy
+    # greedy action selection lives in the repro.policy dqn_policy
+    # adapter — one decision surface for every harness
+    return init, q_values, update, sync_target

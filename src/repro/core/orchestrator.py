@@ -12,7 +12,6 @@ between deliverables (e)/(g) and the paper's technique.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
 
 import numpy as np
 
@@ -37,15 +36,20 @@ class ModelVariant:
 
 
 class IntelligentOrchestrator:
-    """Cloud-hosted RL orchestrator (§II-C step 3-4)."""
+    """Cloud-hosted RL orchestrator (§II-C step 3-4).
 
-    def __init__(self, env: EdgeCloudEnv, policy_fn: Callable):
+    Takes any ``repro.policy`` Policy + params — a trained agent's
+    ``(agent.policy, agent.policy_params)``, a loaded PolicyBundle's
+    ``policy_from_bundle`` pair, the heuristic greedy baseline, ..."""
+
+    def __init__(self, env: EdgeCloudEnv, policy, params):
         self.env = env
-        self.policy_fn = policy_fn
+        self.policy = policy
+        self.params = params
 
     def decide_round(self) -> list[OrchestrationDecision]:
         """Greedy decisions for one full round of requests."""
-        info = self.env.rollout_greedy(self.policy_fn)
+        info = self.env.rollout_greedy(self.policy, self.params)
         out = []
         for i, a in enumerate(info["actions"]):
             if a < lm.N_MODELS:

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.env import latency_model as lm
 from repro.env.scenarios import Scenario, CONSTRAINTS
+from repro.policy.api import act_single
 from repro.specs.observation import (ObsInputs, make_spec,
                                      DEFAULT_LATENCY_TARGET_MS)
 
@@ -121,22 +122,6 @@ class EdgeCloudEnv:
             constraint=self.cfg.constraint,
             latency_target=self.cfg.latency_target))
 
-    def discrete_key(self) -> tuple:
-        """Full-observation tuple for tabular (AutoScale-style) agents."""
-        sc = self.cfg.scenario
-        k_edge = int((self.actions == lm.A_EDGE).sum()) + self.bg["bg_edge"]
-        k_cloud = int((self.actions == lm.A_CLOUD).sum()) + self.bg["bg_cloud"]
-        decided = self.actions >= 0
-        acc_sum = float(lm.action_accuracy(
-            np.where(decided, self.actions, 0))[decided].sum())
-        return (self.user,
-                tuple(self.bg["busy_p_s"].tolist()),
-                tuple(self.bg["busy_m_s"].tolist()),
-                tuple(sc.weak_s),
-                min(k_edge, 8), self.bg["busy_m_e"], sc.weak_e,
-                min(k_cloud, 8), self.bg["busy_m_c"],
-                int(acc_sum))  # 1%-granular accuracy-so-far
-
     def _partial_time(self, user: int) -> float:
         """Response time of ``user``'s request under the load assigned so
         far (dense shaping term; the terminal step corrects to the exact
@@ -205,8 +190,10 @@ class EdgeCloudEnv:
         return new
 
     # ---------------- evaluation helpers ----------------
-    def rollout_greedy(self, policy_fn):
-        """One quiet round under argmax policy. Returns info dict."""
+    def rollout_greedy(self, policy, params):
+        """One quiet round under a ``repro.policy`` Policy (the same
+        ``act(params, obs, key)`` protocol the fleet evaluator and the
+        serving gateway drive). Returns the terminal info dict."""
         saved = (self.bg, self.user, self.actions.copy(),
                  self.cfg.quiet)
         self.cfg.quiet = True
@@ -214,7 +201,7 @@ class EdgeCloudEnv:
         obs = self.observe()
         info = {}
         for _ in range(self.n):
-            a = int(policy_fn(obs, self.discrete_key()))
+            a = act_single(policy, params, obs)
             obs, r, done, info = self.step(a)
         self.cfg.quiet = saved[3]
         self.bg, self.user, self.actions = saved[0], saved[1], saved[2]

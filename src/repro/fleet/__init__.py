@@ -15,11 +15,12 @@ from repro.fleet.workload import (FleetScenario, from_table4, random_fleet,
 from repro.fleet.env import FleetConfig, FleetState, make_fleet_env
 from repro.fleet.solver import solve_optimal, solve_fleet
 from repro.fleet.evaluate import (make_greedy_evaluator,
-                                  make_throughput_runner)
+                                  make_throughput_runner,
+                                  run_policy_round)
 
 __all__ = [
     "FleetScenario", "from_table4", "random_fleet", "curriculum_fleets",
     "FleetConfig", "FleetState", "make_fleet_env",
     "solve_optimal", "solve_fleet",
-    "make_greedy_evaluator", "make_throughput_runner",
+    "make_greedy_evaluator", "make_throughput_runner", "run_policy_round",
 ]

@@ -1,19 +1,20 @@
-"""Batched greedy-policy evaluation over a fleet.
+"""Batched policy evaluation over a fleet, through the unified Policy API.
 
-One jitted DQN forward pass per round position decides for *every* cell at
-once; a ``lax.scan`` over the ``n_max`` round positions rolls a complete
+One jitted ``policy.act`` call per round position decides for *every* cell
+at once; a ``lax.scan`` over the ``n_max`` round positions rolls a complete
 round for the whole fleet.  This is the evaluation analogue of
 ``EdgeCloudEnv.rollout_greedy`` — but where the numpy loop issues ~10³
 decisions/s, the scan sustains ≥10⁵/s on CPU (``benchmarks/fleet.py``
 measures it).
 
-The policy is any ``apply_fn(params, obs) -> (C, n_actions)`` — by default
-wire in ``repro.core.networks.apply_mlp_net``.  The evaluator is
-observation-spec agnostic: the env it builds encodes through
-``cfg.spec()`` (``repro.specs.observation``), so any spec variant works as
-long as the params' input width matches ``cfg.state_dim`` — e.g. DQN
-params trained on the 5-user Python env evaluate directly at
-``n_max == 5`` under the ``base`` spec (identical layout).
+The policy is any jit-able ``repro.policy.Policy``; the default is the
+``dqn_policy`` adapter (greedy argmax over ``core.networks`` params), so
+``evaluate(params, scenario, key)`` keeps accepting raw DQN param pytrees
+— e.g. params trained on the 5-user Python env evaluate directly at
+``n_max == 5`` under the ``base`` spec (identical layout).  Any spec
+variant works as long as the params' input width matches
+``cfg.state_dim``.  Scenario-conditioned policies (greedy heuristic,
+solver oracle) work too: pass their scenario-refreshed params.
 """
 from __future__ import annotations
 
@@ -22,56 +23,79 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.networks import apply_mlp_net
 from repro.fleet.env import FleetConfig, make_fleet_env
 from repro.fleet.workload import FleetScenario
+from repro.policy.adapters import dqn_policy
+from repro.policy.api import Policy
 
 
-def make_greedy_evaluator(cfg: FleetConfig, apply_fn=apply_mlp_net):
+def run_policy_round(env, policy: Policy, cfg: FleetConfig, params,
+                     scenario: FleetScenario, state, key):
+    """One complete fleet round through ``policy.act``: scan ``n_max``
+    decision steps from ``state`` and gather each cell's *first* completed
+    round (a cell completes at step n_users-1; cells with few users
+    auto-reset and may complete again — take the first).  Traceable: the
+    evaluator and the serving gateway both jit through here, so the
+    round-completion semantics live in exactly one place.  Returns
+    ``(state', {"art", "acc", "violated"})`` with (C,) info arrays."""
+
+    def body(carry, _):
+        st, k = carry
+        k, k_act = jax.random.split(k)
+        obs = env.observe(scenario, st)
+        a = policy.act(params, obs, k_act)
+        st, _, _, done, info = env.step(scenario, st, a)
+        return (st, k), (done, info["art"], info["acc"],
+                         info["violated"])
+
+    (state, _), (done, art, acc, violated) = jax.lax.scan(
+        body, (state, key), None, length=cfg.n_max)
+    first = jnp.argmax(done, axis=0)
+    cell = jnp.arange(art.shape[1])
+    return state, {"art": art[first, cell], "acc": acc[first, cell],
+                   "violated": violated[first, cell]}
+
+
+def make_greedy_evaluator(cfg: FleetConfig, policy: Policy | None = None):
     """Returns jitted ``evaluate(params, scenario, key) -> info`` running
     one quiet greedy round per cell; info arrays are (C,)."""
-    env = make_fleet_env(dataclasses.replace(cfg, quiet=True))
+    policy = dqn_policy(cfg.spec()) if policy is None else policy
+    quiet_cfg = dataclasses.replace(cfg, quiet=True)
+    env = make_fleet_env(quiet_cfg)
 
     @jax.jit
     def evaluate(params, scenario: FleetScenario, key):
-        state = env.init(key, scenario)
-
-        def body(st, _):
-            obs = env.observe(scenario, st)
-            a = jnp.argmax(apply_fn(params, obs), axis=-1)
-            st, _, _, done, info = env.step(scenario, st, a)
-            return st, (done, info["art"], info["acc"], info["violated"])
-
-        _, (done, art, acc, violated) = jax.lax.scan(
-            body, state, None, length=cfg.n_max)
-        # each cell completes its first round at step n_users-1; cells with
-        # few users auto-reset and may complete again — take the first.
-        first = jnp.argmax(done, axis=0)
-        cell = jnp.arange(art.shape[1])
-        return {"art": art[first, cell], "acc": acc[first, cell],
-                "violated": violated[first, cell]}
+        # independent streams: env background init vs policy act keys
+        k_init, k_act = jax.random.split(key)
+        _, info = run_policy_round(env, policy, quiet_cfg, params,
+                                   scenario, env.init(k_init, scenario),
+                                   k_act)
+        return info
 
     return evaluate
 
 
-def make_throughput_runner(cfg: FleetConfig, apply_fn=apply_mlp_net,
+def make_throughput_runner(cfg: FleetConfig, policy: Policy | None = None,
                            n_steps: int = 100):
     """Returns jitted ``run(params, scenario, key) -> mean_reward`` that
     issues ``n_steps`` fleet-wide orchestration decisions (C decisions per
     step) through the policy + env, for throughput measurement."""
+    policy = dqn_policy(cfg.spec()) if policy is None else policy
     env = make_fleet_env(cfg)
 
     @jax.jit
     def run(params, scenario: FleetScenario, key):
         state = env.init(key, scenario)
 
-        def body(st, _):
+        def body(carry, _):
+            st, k = carry
+            k, k_act = jax.random.split(k)
             obs = env.observe(scenario, st)
-            a = jnp.argmax(apply_fn(params, obs), axis=-1)
+            a = policy.act(params, obs, k_act)
             st, _, r, _, _ = env.step(scenario, st, a)
-            return st, r.mean()
+            return (st, k), r.mean()
 
-        _, rewards = jax.lax.scan(body, state, None, length=n_steps)
+        _, rewards = jax.lax.scan(body, (state, key), None, length=n_steps)
         return rewards.mean()
 
     return run

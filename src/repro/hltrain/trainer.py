@@ -54,6 +54,7 @@ from repro.hltrain.buffers import (Ring, PrioRing, PlanRing, ring_init,
                                    prio_add, prio_sample, prio_update,
                                    plan_init, plan_contains, plan_add,
                                    hash_state_action)
+from repro.policy.adapters import dqn_policy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,7 +122,10 @@ class FleetHLTrainer(NamedTuple):
     #                      n_epochs — chunk epochs to interleave host evals
     resume: callable     # (state, scenario) -> state; call after swapping
     #                      the scenario (curriculum stage / trace row)
-    act_greedy: callable  # (params, obs (C, D)) -> (C,) int32
+    policy: object       # the trained decision surface as a
+    #                      repro.policy.Policy ("dqn" adapter): feed it
+    #                      state.dqn.params for evaluation / bundling /
+    #                      the serving gateway
 
 
 def _where_tree(pred, new, old):
@@ -154,8 +158,9 @@ def make_hl_trainer(cfg: FleetConfig, hp: FleetHLParams = None,
     # observation width/normalization comes from the spec, never hard-coded
     spec = cfg.spec()
     state_dim = spec.dim
+    policy = dqn_policy(spec, latency.N_ACTIONS, hidden=hp.hidden)
     n_actions = latency.N_ACTIONS
-    dqn_init, _, dqn_update, dqn_sync, _ = make_dqn(
+    dqn_init, _, dqn_update, dqn_sync = make_dqn(
         spec, n_actions, hidden=hp.hidden, lr=hp.lr, gamma=hp.gamma)
     sm_init, _, sm_predict_all, sm_update = make_system_model(
         spec, n_actions, lr=hp.model_lr)
@@ -184,11 +189,6 @@ def make_hl_trainer(cfg: FleetConfig, hp: FleetHLParams = None,
         env_state = env.reset_rounds(state.env)
         return state._replace(env=env_state,
                               obs=env.observe(scenario, env_state))
-
-    @jax.jit
-    def act_greedy(params, obs):
-        return jnp.argmax(apply_mlp_net(params, obs), axis=-1).astype(
-            jnp.int32)
 
     # ------------------------------------------------------------ phase (1)
     def make_phases(scenario: FleetScenario):
@@ -358,4 +358,29 @@ def make_hl_trainer(cfg: FleetConfig, hp: FleetHLParams = None,
                             epoch_start + jnp.arange(n_epochs))
 
     return FleetHLTrainer(init=init, run=run, resume=resume,
-                          act_greedy=act_greedy)
+                          policy=policy)
+
+
+def run_curriculum(trainer: FleetHLTrainer, stages, epochs: int,
+                   chunk: int, key, on_stage=None) -> HLTrainState:
+    """Drive a chunked curriculum through a trainer: init on the first
+    stage, ``resume`` at every stage swap (aborting in-flight rounds
+    before the user counts change), ``run`` up to ``chunk`` epochs per
+    stage with the final stage truncated to ``epochs`` total.  The single
+    definition of the stage/chunk/resume protocol — the rl_train CLI, the
+    hltrain benchmark, and the serve benchmark all train through here.
+    ``on_stage(stage_idx, scenario, state, metrics)`` observes each chunk
+    (progress printing, convergence checks)."""
+    state = trainer.init(key, stages[0])
+    for s, scenario in enumerate(stages):
+        # resume (= abort in-flight rounds) only when the scenario really
+        # swaps — repeating one fixed fleet must not clear round state
+        if s and scenario is not stages[s - 1]:
+            state = trainer.resume(state, scenario)
+        start = s * chunk
+        state, metrics = trainer.run(state, scenario, start,
+                                     min(chunk, epochs - start))
+        state = jax.block_until_ready(state)
+        if on_stage is not None:
+            on_stage(s, scenario, state, metrics)
+    return state

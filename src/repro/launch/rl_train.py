@@ -13,6 +13,10 @@ epoch chunk):
         --cells 256 --n-max 8 --epochs 60 [--no-curriculum] \
         [--obs-spec base|contention|constraint|full] \
         [--shared-cloud] [--shared-edge] [--cells-per-edge 4]
+
+``--ckpt`` (both paths) writes a versioned ``repro.policy`` PolicyBundle —
+params + obs-spec + n_max + schema version — loadable by the trace-driven
+serving gateway: ``python -m repro.launch.serve_fleet --bundle <path>``.
 """
 from __future__ import annotations
 
@@ -22,12 +26,12 @@ import time
 import jax
 import numpy as np
 
-from repro.checkpoint.ckpt import save
 from repro.core.agent import HLAgent, HLHyperParams, ConvergenceTracker
 from repro.core.baselines import DQLAgent, QLAgent
 from repro.env.edge_cloud import (EdgeCloudEnv, EnvConfig,
                                   brute_force_optimal, decision_string)
 from repro.env.scenarios import SCENARIOS, CONSTRAINTS
+from repro.policy.bundle import PolicyBundle, save_bundle
 from repro.specs.observation import SPEC_NAMES
 
 
@@ -36,7 +40,7 @@ def run_fleet(args):
     the fully-jitted repro.hltrain trainer, scored against fleet.solver."""
     from repro.fleet import (FleetConfig, random_fleet, curriculum_fleets)
     from repro.hltrain import (FleetHLParams, make_hl_trainer,
-                               evaluate_vs_solver)
+                               evaluate_vs_solver, run_curriculum)
 
     cfg = FleetConfig(n_max=args.n_max, shared_cloud=args.shared_cloud,
                       shared_edge=args.shared_edge,
@@ -64,21 +68,18 @@ def run_fleet(args):
           f"{args.epochs} epochs in {n_stages} stages "
           f"({'curriculum 2→' + str(args.n_max) if args.curriculum else 'fixed fleet'})")
 
-    state = trainer.init(k_init, stages[0])
-    t0 = time.time()
-    for s, scn in enumerate(stages):
-        if s and args.curriculum:
-            # user counts changed: abort in-flight rounds before stepping
-            # under the new scenario (no-op fleets don't need it)
-            state = trainer.resume(state, scn)
+    def on_stage(s, scn, state, m):
         start = s * chunk
         n = min(chunk, args.epochs - start)
-        state, m = trainer.run(state, scn, start, n)
         print(f"stage {s + 1}/{n_stages}: epochs {start}–{start + n - 1}, "
               f"users ≤ {int(np.asarray(scn.n_users).max())}, "
               f"mean_r {float(np.asarray(m['mean_reward'])[-1]):.4f}, "
               f"eps {float(np.asarray(m['epsilon'])[-1]):.3f}, "
               f"real_steps {int(state.real_steps):,}")
+
+    t0 = time.time()
+    state = run_curriculum(trainer, stages, args.epochs, chunk, k_init,
+                           on_stage)
     wall = time.time() - t0
     print(f"\ntrained in {wall:.0f}s wall — "
           f"{int(state.real_steps):,} real interactions "
@@ -102,8 +103,19 @@ def run_fleet(args):
           f"(gap {gen['mean_reward_gap']:.1%}, "
           f"violations {gen['violation_rate']:.1%})")
     if args.ckpt:
-        save(args.ckpt, {"dqn": state.dqn.params, "system": state.sm.params})
-        print("saved →", args.ckpt)
+        save_bundle(args.ckpt, PolicyBundle(
+            kind="dqn", obs_spec=cfg.obs_spec, n_max=cfg.n_max,
+            params=state.dqn.params,
+            meta={"algo": "HL", "trainer": "hltrain-fleet",
+                  "cells": args.cells, "epochs": args.epochs,
+                  "curriculum": bool(args.curriculum),
+                  "shared_cloud": bool(args.shared_cloud),
+                  "shared_edge": bool(args.shared_edge),
+                  "cells_per_edge": int(args.cells_per_edge),
+                  "held_out_violation_rate": float(gen["violation_rate"]),
+                  "system": state.sm.params}))
+        print("saved PolicyBundle →", args.ckpt,
+              f"(dqn, spec {cfg.obs_spec!r}, n_max={cfg.n_max})")
 
 
 def main():
@@ -167,20 +179,20 @@ def main():
             eps_decay_steps=1000 * args.users, k_best=4,
             n_suggest=2 * args.users))
         res = agent.train(tracker=tracker)
-        ckpt_obj = {"dqn": agent.dqn.params, "system": agent.sm.params}
+        extra = {"system": agent.sm.params}
     elif args.algo == "DQL":
         agent = DQLAgent(env(args.seed), HLHyperParams(
             seed=args.seed, eps_decay_steps=6000 * args.users))
         res = agent.train(tracker=tracker,
                           max_steps=args.max_steps or 300_000,
                           eval_every=200)
-        ckpt_obj = {"dqn": agent.dqn.params}
+        extra = {}
     else:
         agent = QLAgent(env(args.seed))
         res = agent.train(tracker=tracker,
                           max_steps=args.max_steps or 2_000_000,
                           eval_every=2000)
-        ckpt_obj = None
+        extra = {}
 
     print(f"\n{args.algo}: converged@{res.steps_to_converge} "
           f"(total {res.real_steps} interactions, "
@@ -189,9 +201,15 @@ def main():
           f"decisions={decision_string(res.final_actions)}")
     print(f"experience time {res.exp_time_ms / 60000:.1f} min (simulated), "
           f"compute time {res.comp_time_s / 60:.2f} min")
-    if args.ckpt and ckpt_obj is not None:
-        save(args.ckpt, ckpt_obj)
-        print("saved →", args.ckpt)
+    if args.ckpt:
+        save_bundle(args.ckpt, PolicyBundle(
+            kind=agent.policy.kind, obs_spec="base", n_max=args.users,
+            params=agent.policy_params,
+            meta={"algo": args.algo, "trainer": "python-single-cell",
+                  "scenario": args.scenario, "constraint": args.constraint,
+                  "final_art_ms": float(res.final_art), **extra}))
+        print(f"saved PolicyBundle → {args.ckpt} "
+              f"({agent.policy.kind}, spec 'base', n_max={args.users})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,27 @@
+"""Unified Policy API: one ``act()`` protocol for every decision-maker,
+plus versioned PolicyBundle checkpoints.
+
+    api       the ``Policy`` protocol (init/act/refresh) + single-cell glue
+    adapters  every decision-maker as a Policy: DQN-family nets, the
+              tabular Q baseline, the latency-greedy heuristic, the exact
+              solver oracle, an ε-greedy combinator
+    bundle    self-describing versioned checkpoints (params + spec name +
+              n_max + schema version) with defensive load
+"""
+from repro.policy.api import Policy, act_single, refresh_params
+from repro.policy.adapters import (dqn_policy, epsilon_greedy,
+                                   heuristic_greedy_policy, obs_table_key,
+                                   oracle_params, oracle_policy,
+                                   qtable_policy, solve_oracle)
+from repro.policy.bundle import (BUNDLE_VERSION, BundleError, PolicyBundle,
+                                 SpecMismatchError, load_bundle,
+                                 policy_from_bundle, save_bundle)
+
+__all__ = [
+    "Policy", "act_single", "refresh_params",
+    "dqn_policy", "epsilon_greedy", "heuristic_greedy_policy",
+    "obs_table_key", "oracle_params", "oracle_policy", "qtable_policy",
+    "solve_oracle",
+    "BUNDLE_VERSION", "BundleError", "PolicyBundle", "SpecMismatchError",
+    "load_bundle", "policy_from_bundle", "save_bundle",
+]

@@ -1,0 +1,81 @@
+"""The unified Policy protocol — one decision interface for every
+orchestrator in the repo.
+
+Before this package, every decision-maker exposed its own incompatible
+surface: ``HLAgent.policy_fn(obs, _key)``, ``QLAgent.policy_fn(_obs, key)``,
+hltrain's raw param pytrees fed to ``apply_mlp_net``, ``fleet.evaluate``'s
+greedy closure, and ``core.orchestrator``'s bare callable.  Trainers,
+evaluators, benchmarks, and the serving gateway each special-cased one of
+them, so a trained policy could not move between harnesses.
+
+A ``Policy`` is *functional*: the decision rule is a pair of pure
+functions and the learned state is an explicit params pytree —
+
+    params  = policy.init(key)
+    actions = policy.act(params, obs, key)     # (C, D) -> (C,) int32
+
+``act`` is batched over cells (leading axis C) and, for every on-device
+adapter, pure and vmap/jit-friendly: the fleet trainer, the batched
+evaluator, and the trace-replay gateway all ``jit``/``scan`` straight
+through it.  Host-side adapters (the tabular Q baseline) keep the same
+call signature so single-cell Python harnesses need no special case.
+
+Scenario-conditioned policies (the heuristic greedy baseline, the exact
+solver oracle) carry scenario constants — constraints, user counts, the
+oracle's precomputed action table — *in params*, and expose ``refresh``
+so open-loop serving can re-derive them at round boundaries when the
+Poisson trace swaps per-cell user counts.  ``refresh`` is data-plumbing,
+not learning: ``act`` stays pure.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import numpy as np
+
+
+class Policy(NamedTuple):
+    """Functional decision protocol: ``init(key) -> params`` and
+    ``act(params, obs, key) -> actions`` with obs (C, D) -> actions (C,).
+
+    ``kind`` names the adapter family ("dqn", "qtable", "greedy",
+    "oracle", ...) — it is what a :class:`~repro.policy.bundle.PolicyBundle`
+    records so a checkpoint can be rebuilt into the right adapter.
+    ``refresh(params, scenario) -> params`` (optional) re-derives
+    scenario-borne params after a scenario swap; ``None`` means params
+    are scenario-independent (e.g. network weights).
+    ``jittable`` marks whether ``act`` is traceable (pure jnp on device);
+    host-side adapters (the tabular Q dict) set it False, and jitted
+    harnesses (the fleet gateway) must reject them up front instead of
+    crashing mid-trace.
+    """
+    kind: str
+    init: Callable[[Any], Any]
+    act: Callable[[Any, Any, Any], Any]
+    refresh: Optional[Callable[[Any, Any], Any]] = None
+    jittable: bool = True
+
+
+_DEFAULT_KEY = jax.random.PRNGKey(0)
+
+
+def act_single(policy: Policy, params, obs, key=None) -> int:
+    """Single-cell convenience: (D,) obs -> python int action.
+
+    The batched ``act`` contract is the primitive; Python-loop harnesses
+    (``EdgeCloudEnv.rollout_greedy``, the per-request orchestrator) call
+    through here so they share the exact same decision path as the
+    vectorized fleet."""
+    if key is None:
+        key = _DEFAULT_KEY
+    obs = np.asarray(obs)
+    return int(np.asarray(policy.act(params, obs[None, :], key))[0])
+
+
+def refresh_params(policy: Policy, params, scenario):
+    """Apply ``policy.refresh`` if present (identity otherwise) — the one
+    call sites use so scenario-independent policies need no branch."""
+    if policy.refresh is None:
+        return params
+    return policy.refresh(params, scenario)

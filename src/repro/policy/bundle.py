@@ -1,0 +1,141 @@
+"""Versioned PolicyBundle checkpoints — a trained policy as a portable,
+self-describing artifact.
+
+``checkpoint.ckpt`` serializes bare pytrees; a bundle additionally records
+*what the params are*: the adapter kind, the ObservationSpec name and
+``n_max`` the policy was trained under, a schema version, and free-form
+metadata (trainer, fleet size, companion system-model params, ...).  Load
+is defensive: a non-bundle file, an unknown/newer schema, an unknown spec,
+params whose input width contradicts the declared spec, or a caller
+expectation mismatch all raise instead of silently mis-decoding — a DQN
+trained on the 28-feature ``base``/n=5 layout must never be driven with
+``full``/n=32 observations.
+
+    bundle = PolicyBundle(kind="dqn", obs_spec="full", n_max=8,
+                          params=state.dqn.params)
+    save_bundle("hl.bundle.msgpack", bundle)
+    bundle = load_bundle("hl.bundle.msgpack", expect_spec="full")
+    policy, params = policy_from_bundle(bundle)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.checkpoint.ckpt import restore, save
+from repro.policy import adapters
+from repro.policy.api import Policy
+from repro.specs.observation import SPEC_NAMES, make_spec
+
+BUNDLE_FORMAT = "repro.policy.bundle"
+BUNDLE_VERSION = 1
+
+
+class BundleError(ValueError):
+    """Malformed / unsupported bundle (not a bundle, newer schema,
+    unknown kind or spec, params inconsistent with the declared spec)."""
+
+
+class SpecMismatchError(BundleError):
+    """Bundle's declared observation spec / n_max does not satisfy the
+    caller's expectation, or the params contradict the declaration."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyBundle:
+    kind: str           # adapter family: "dqn" | "greedy" | "qtable" | ...
+    obs_spec: str       # ObservationSpec variant name (SPEC_NAMES)
+    n_max: int          # spec width parameter the policy was trained at
+    params: Any         # the policy's params pytree
+    meta: dict = dataclasses.field(default_factory=dict)
+    version: int = BUNDLE_VERSION
+
+    def spec(self):
+        return make_spec(self.obs_spec, self.n_max)
+
+
+def _validate(bundle: PolicyBundle) -> None:
+    if bundle.obs_spec not in SPEC_NAMES:
+        raise BundleError(
+            f"bundle declares unknown observation spec "
+            f"{bundle.obs_spec!r}; known: {SPEC_NAMES}")
+    if bundle.n_max < 1:
+        raise BundleError(f"bundle n_max must be >= 1, got {bundle.n_max}")
+    if bundle.kind == "dqn":
+        # the params themselves witness the spec: the first layer's input
+        # width must equal the declared spec's feature dim
+        try:
+            width = int(np.asarray(bundle.params[0]["w"]).shape[0])
+        except (TypeError, KeyError, IndexError) as e:
+            raise BundleError(
+                f"dqn bundle params are not a core.networks layer list: "
+                f"{e!r}") from e
+        dim = bundle.spec().dim
+        if width != dim:
+            raise SpecMismatchError(
+                f"dqn params expect {width}-dim observations but the "
+                f"declared spec {bundle.obs_spec!r}/n_max={bundle.n_max} "
+                f"encodes {dim} features")
+
+
+def save_bundle(path: str, bundle: PolicyBundle) -> None:
+    _validate(bundle)
+    save(path, {
+        "format": BUNDLE_FORMAT,
+        "version": int(bundle.version),
+        "kind": str(bundle.kind),
+        "obs_spec": str(bundle.obs_spec),
+        "n_max": int(bundle.n_max),
+        "params": bundle.params,
+        "meta": dict(bundle.meta),
+    })
+
+
+def load_bundle(path: str, *, expect_spec: str | None = None,
+                expect_n_max: int | None = None) -> PolicyBundle:
+    """Load + validate.  ``expect_spec`` / ``expect_n_max`` assert the
+    consumer's observation pipeline; a mismatch raises
+    :class:`SpecMismatchError` instead of serving garbage decisions."""
+    raw = restore(path)
+    if not isinstance(raw, dict) or raw.get("format") != BUNDLE_FORMAT:
+        raise BundleError(
+            f"{path} is not a PolicyBundle checkpoint (bare pytree "
+            f"checkpoints carry no spec record; re-save with save_bundle)")
+    version = int(raw["version"])
+    if version > BUNDLE_VERSION:
+        raise BundleError(
+            f"{path} uses bundle schema v{version}; this build reads "
+            f"<= v{BUNDLE_VERSION}")
+    bundle = PolicyBundle(kind=str(raw["kind"]),
+                          obs_spec=str(raw["obs_spec"]),
+                          n_max=int(raw["n_max"]), params=raw["params"],
+                          meta=raw.get("meta") or {}, version=version)
+    _validate(bundle)
+    if expect_spec is not None and expect_spec != bundle.obs_spec:
+        raise SpecMismatchError(
+            f"{path} was trained under obs spec {bundle.obs_spec!r}, "
+            f"caller expects {expect_spec!r}")
+    if expect_n_max is not None and expect_n_max != bundle.n_max:
+        raise SpecMismatchError(
+            f"{path} was trained at n_max={bundle.n_max}, caller expects "
+            f"n_max={expect_n_max}")
+    return bundle
+
+
+def policy_from_bundle(bundle: PolicyBundle) -> tuple[Policy, Any]:
+    """Rebuild the (policy, params) pair a bundle describes."""
+    spec = bundle.spec()
+    if bundle.kind == "dqn":
+        hidden = tuple(int(np.asarray(w["w"]).shape[1])
+                       for w in bundle.params[:-1])
+        return adapters.dqn_policy(spec, hidden=hidden), bundle.params
+    if bundle.kind == "greedy":
+        return adapters.heuristic_greedy_policy(spec), bundle.params
+    if bundle.kind == "oracle":
+        return adapters.oracle_policy(spec), bundle.params
+    if bundle.kind == "qtable":
+        params = {k: np.asarray(v) for k, v in bundle.params.items()}
+        return adapters.qtable_policy(), params
+    raise BundleError(f"unknown policy kind {bundle.kind!r}")

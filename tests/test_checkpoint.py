@@ -1,0 +1,152 @@
+"""checkpoint.ckpt round-trip properties + PolicyBundle schema defenses.
+
+The msgpack pytree checkpointer underpins every bundle, so its round-trip
+contract is property-tested: arbitrary nested dict/list/tuple pytrees of
+mixed-dtype arrays (float32 / int32 / bool) and python scalars (bool, int,
+float, str, None) must restore with identical structure, dtypes, and
+values.  On top of it, the versioned PolicyBundle layer must reject what
+the bare checkpointer cannot: non-bundle files, newer schema versions,
+unknown specs/kinds.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.ckpt import restore, save
+from repro.policy.bundle import (BUNDLE_FORMAT, BUNDLE_VERSION, BundleError,
+                                 load_bundle, policy_from_bundle,
+                                 PolicyBundle, save_bundle)
+
+
+def _assert_tree_equal(original, restored):
+    if isinstance(original, dict):
+        assert isinstance(restored, dict)
+        assert set(original) == set(restored)
+        for k in original:
+            _assert_tree_equal(original[k], restored[k])
+    elif isinstance(original, tuple):
+        assert isinstance(restored, tuple) and len(original) == len(restored)
+        for a, b in zip(original, restored):
+            _assert_tree_equal(a, b)
+    elif isinstance(original, list):
+        assert isinstance(restored, list) and len(original) == len(restored)
+        for a, b in zip(original, restored):
+            _assert_tree_equal(a, b)
+    elif isinstance(original, np.ndarray):
+        assert isinstance(restored, jnp.ndarray)
+        assert original.shape == restored.shape
+        assert original.dtype == np.dtype(restored.dtype)
+        np.testing.assert_array_equal(original,
+                                      np.asarray(restored))
+    else:
+        assert type(original) is type(restored), (original, restored)
+        assert original == restored or (original != original and
+                                        restored != restored)
+
+
+def _roundtrip(tmp_path, tree):
+    path = str(tmp_path / "t.msgpack")
+    save(path, tree)
+    return restore(path)
+
+
+def test_roundtrip_mixed_scalars_and_bool_arrays(tmp_path):
+    tree = {
+        "weights": [np.arange(6, dtype=np.float32).reshape(2, 3),
+                    {"mask": np.array([True, False, True])}],
+        "step": 7,
+        "lr": 1e-3,
+        "name": "hl",
+        "frozen": False,
+        "none": None,
+        "shape": (2, np.int32(3).item(), ("deep", True)),
+    }
+    _assert_tree_equal(tree, _roundtrip(tmp_path, tree))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    _SCALARS = st.one_of(
+        st.none(), st.booleans(), st.integers(-2 ** 40, 2 ** 40),
+        st.floats(allow_nan=False, allow_infinity=False, width=32),
+        st.text(st.characters(min_codepoint=97, max_codepoint=122),
+                max_size=6))
+
+    @st.composite
+    def _arrays(draw):
+        dtype = draw(st.sampled_from(["float32", "int32", "bool"]))
+        shape = tuple(draw(st.lists(st.integers(0, 3), max_size=2)))
+        n = int(np.prod(shape)) if shape else 1
+        vals = draw(st.lists(st.integers(-100, 100),
+                             min_size=n, max_size=n))
+        return np.array(vals, np.int32).reshape(shape).astype(dtype)
+
+    # keys stay clear of the encoder's "__arr__"/"__tuple__" sentinels
+    _KEYS = st.text(st.characters(min_codepoint=97, max_codepoint=122),
+                    min_size=1, max_size=5)
+    _TREES = st.recursive(
+        st.one_of(_SCALARS, _arrays()),
+        lambda kids: st.one_of(
+            st.lists(kids, max_size=3),
+            st.dictionaries(_KEYS, kids, max_size=3),
+            st.tuples(kids), st.tuples(kids, kids),
+            st.tuples(kids, kids, kids)),
+        max_leaves=10)
+
+    @settings(max_examples=40, deadline=None)
+    @given(_TREES)
+    def test_property_pytree_roundtrip(tree):
+        """Any nested dict/list/tuple pytree of mixed-dtype arrays and
+        python scalars survives save→restore bit-for-bit (satellite)."""
+        import tempfile, os
+        with tempfile.TemporaryDirectory() as td:
+            path = os.path.join(td, "t.msgpack")
+            save(path, tree)
+            _assert_tree_equal(tree, restore(path))
+except ImportError:  # pragma: no cover - hypothesis is optional
+    pass
+
+
+# ------------------------------------------------ bundle schema defenses
+def _tiny_dqn_bundle():
+    from repro.policy.adapters import dqn_policy
+    from repro.specs.observation import make_spec
+    import jax
+    params = dqn_policy(make_spec("base", 3),
+                        hidden=(8,)).init(jax.random.PRNGKey(0))
+    return PolicyBundle(kind="dqn", obs_spec="base", n_max=3,
+                        params=params)
+
+
+def test_bundle_rejects_bare_pytree_checkpoint(tmp_path):
+    path = str(tmp_path / "bare.msgpack")
+    save(path, {"dqn": [np.zeros((4, 2), np.float32)]})
+    with pytest.raises(BundleError, match="not a PolicyBundle"):
+        load_bundle(path)
+
+
+def test_bundle_rejects_newer_schema_version(tmp_path):
+    path = str(tmp_path / "future.msgpack")
+    save_bundle(path, _tiny_dqn_bundle())
+    raw = restore(path)
+    raw["version"] = BUNDLE_VERSION + 1
+    save(path, raw)
+    with pytest.raises(BundleError, match="schema"):
+        load_bundle(path)
+    assert raw["format"] == BUNDLE_FORMAT
+
+
+def test_bundle_rejects_unknown_spec_and_kind(tmp_path):
+    path = str(tmp_path / "odd.msgpack")
+    save_bundle(path, _tiny_dqn_bundle())
+    raw = restore(path)
+    raw["obs_spec"] = "imaginary"
+    save(path, raw)
+    with pytest.raises(BundleError, match="unknown observation spec"):
+        load_bundle(path)
+    raw["obs_spec"] = "base"
+    raw["kind"] = "transformer"
+    save(path, raw)
+    with pytest.raises(BundleError, match="unknown policy kind"):
+        policy_from_bundle(load_bundle(path))

@@ -23,10 +23,10 @@ from repro.env.scenarios import SCENARIOS, CONSTRAINTS
 from repro.fleet import (FleetConfig, make_fleet_env, from_table4,
                          random_fleet, curriculum_fleets)
 from repro.hltrain import (FleetHLParams, make_hl_trainer, real_step_budget,
-                           evaluate_vs_solver, ring_init, ring_add,
-                           ring_sample, prio_init, prio_add, prio_sample,
-                           prio_update, plan_init, plan_contains, plan_add,
-                           hash_state_action)
+                           evaluate_vs_solver, run_curriculum, ring_init,
+                           ring_add, ring_sample, prio_init, prio_add,
+                           prio_sample, prio_update, plan_init,
+                           plan_contains, plan_add, hash_state_action)
 
 
 # ----------------------------------------------------------------- buffers
@@ -281,6 +281,31 @@ def test_curriculum_fleets_grow_user_counts():
     assert caps[0] == 2 and caps[-1] <= 16 and caps == sorted(caps)
     assert all(s.n_max == 16 for s in stages)  # fixed shape: no recompile
     assert all(int(np.asarray(s.n_users).min()) >= 2 for s in stages)
+
+
+def test_run_curriculum_epoch_accounting_and_stage_swaps():
+    """The shared curriculum driver (rl_train / benchmarks train through
+    it) must reproduce the exact direct-step budget over its chunked
+    stages, truncate the final chunk to the epoch total, and only resume
+    (abort rounds) on a real scenario swap."""
+    hp = _tiny_hp(epochs=5)
+    trainer = make_hl_trainer(FleetConfig(n_max=4), hp)
+    stages = curriculum_fleets(jax.random.PRNGKey(0), 4, 3, start=2,
+                               end=4)  # 3 stages × chunk 2, epochs=5
+    seen = []
+    state = run_curriculum(trainer, stages, hp.epochs, 2,
+                           jax.random.PRNGKey(1),
+                           on_stage=lambda s, scn, st, m: seen.append(
+                               np.asarray(m["epoch"])))
+    assert [e.tolist() for e in seen] == [[0, 1], [2, 3], [4]]
+    assert int(state.direct_steps) == real_step_budget(
+        hp, n_cells=4)["direct_steps"]
+    # a repeated fixed fleet (identical object) must not abort rounds:
+    # same budget, and the round cursor carries across chunk boundaries
+    fixed = [stages[0]] * 3
+    st2 = run_curriculum(trainer, fixed, hp.epochs, 2,
+                         jax.random.PRNGKey(1))
+    assert int(st2.direct_steps) == int(state.direct_steps)
 
 
 def test_fleet_rollout_matches_stepwise():

@@ -1,0 +1,280 @@
+"""Unified Policy API: protocol, adapters, bundles, serving gateway.
+
+Covers the acceptance contract of the policy-API PR:
+  * one ``act(params, obs, key)`` protocol across every adapter (DQN
+    family, tabular Q, heuristic greedy, solver oracle) and all three
+    Python agents (the ad-hoc ``policy_fn`` methods are gone)
+  * the heuristic greedy baseline never violates a satisfiable constraint
+    and the oracle adapter reproduces the exact solver optimum
+  * PolicyBundle round-trip through ``policy_from_bundle`` and the
+    spec-mismatch / malformed-bundle rejections
+  * the trace-driven gateway: per-round fleet metrics vs the solver
+    oracle, round-boundary user-count swaps, decision accounting
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.agent import HLAgent, HLHyperParams, ConvergenceTracker
+from repro.core.baselines import DQLAgent, QLAgent
+from repro.env import latency_model as lm
+from repro.env.edge_cloud import EdgeCloudEnv, EnvConfig
+from repro.env.scenarios import SCENARIOS, CONSTRAINTS
+from repro.fleet import FleetConfig, make_fleet_env, random_fleet
+from repro.fleet.solver import solve_fleet
+from repro.fleet.workload import poisson_round_trace
+from repro.launch.serve_fleet import replay_trace
+from repro.policy import (Policy, PolicyBundle, SpecMismatchError,
+                          act_single, dqn_policy, epsilon_greedy,
+                          heuristic_greedy_policy, load_bundle,
+                          oracle_params, oracle_policy, policy_from_bundle,
+                          qtable_policy, refresh_params, save_bundle,
+                          solve_oracle)
+from repro.specs.observation import make_spec
+
+
+# ----------------------------------------------------------------- protocol
+def test_dqn_policy_batched_and_deterministic():
+    spec = make_spec("base", 4)
+    pol = dqn_policy(spec, hidden=(16,))
+    params = pol.init(jax.random.PRNGKey(0))
+    obs = jax.random.uniform(jax.random.PRNGKey(1), (7, spec.dim))
+    a1 = pol.act(params, obs, jax.random.PRNGKey(2))
+    a2 = pol.act(params, obs, jax.random.PRNGKey(3))  # key is ignored
+    assert a1.shape == (7,) and a1.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    assert np.all((np.asarray(a1) >= 0) & (np.asarray(a1) < lm.N_ACTIONS))
+    # single-cell glue shares the same decision path
+    assert act_single(pol, params, np.asarray(obs[0])) == int(a1[0])
+
+
+def test_epsilon_greedy_uses_the_protocol_key():
+    spec = make_spec("base", 3)
+    base = dqn_policy(spec, hidden=(8,))
+    params = base.init(jax.random.PRNGKey(0))
+    obs = jax.random.uniform(jax.random.PRNGKey(1), (64, spec.dim))
+    always = epsilon_greedy(base, lm.N_ACTIONS, 1.0)
+    never = epsilon_greedy(base, lm.N_ACTIONS, 0.0)
+    np.testing.assert_array_equal(
+        np.asarray(never.act(params, obs, jax.random.PRNGKey(2))),
+        np.asarray(base.act(params, obs, jax.random.PRNGKey(9))))
+    r1 = np.asarray(always.act(params, obs, jax.random.PRNGKey(3)))
+    r2 = np.asarray(always.act(params, obs, jax.random.PRNGKey(4)))
+    assert not np.array_equal(r1, r2)  # stochastic in the key
+
+
+def _cfg(n=2, seed=0, **kw):
+    return EnvConfig(SCENARIOS["A"], CONSTRAINTS["89%"], n_users=n,
+                     seed=seed, **kw)
+
+
+def test_python_agents_expose_one_policy_surface():
+    """All three agents carry (policy, policy_params) instead of divergent
+    policy_fn methods, and every harness entry point accepts the pair."""
+    env = EdgeCloudEnv(_cfg())
+    agents = (HLAgent(EdgeCloudEnv(_cfg()), HLHyperParams(seed=0)),
+              DQLAgent(EdgeCloudEnv(_cfg(seed=1)), HLHyperParams(seed=1)),
+              QLAgent(EdgeCloudEnv(_cfg(seed=2))))
+    for agent in agents:
+        assert not hasattr(agent, "policy_fn")
+        assert isinstance(agent.policy, Policy)
+        info = env.rollout_greedy(agent.policy, agent.policy_params)
+        assert len(info["actions"]) == env.n
+        assert all(0 <= a < env.n_actions for a in info["actions"])
+
+
+def test_qtable_policy_params_are_the_table():
+    ql = QLAgent(EdgeCloudEnv(_cfg(seed=3)))
+    tracker = ConvergenceTracker(EdgeCloudEnv(_cfg(seed=96)))
+    ql.train(tracker=tracker, max_steps=2000, eval_every=1000,
+             stop_on_convergence=False)
+    assert len(ql.q) > 0
+    pol, params = qtable_policy(), ql.policy_params
+    obs = EdgeCloudEnv(_cfg(seed=3)).reset()
+    a = pol.act(params, obs[None], None)
+    assert a.shape == (1,) and 0 <= int(a[0]) < lm.N_ACTIONS
+
+
+# ----------------------------------------------------------------- adapters
+def test_heuristic_greedy_never_violates_satisfiable_constraints():
+    """Latency-greedy under the remaining-average accuracy requirement is
+    feasible by induction — on any random fleet, zero violations."""
+    scn = random_fleet(jax.random.PRNGKey(5), 24, n_max=5)
+    cfg = FleetConfig(n_max=5, quiet=True)
+    env = make_fleet_env(cfg)
+    pol = heuristic_greedy_policy(cfg.spec())
+    params = refresh_params(pol, pol.init(jax.random.PRNGKey(0)), scn)
+    st = env.init(jax.random.PRNGKey(1), scn)
+    seen = np.zeros(24, bool)
+    for _ in range(5):
+        obs = env.observe(scn, st)
+        a = pol.act(params, obs, jax.random.PRNGKey(0))
+        st, _, _, done, info = env.step(scn, st, a)
+        first = np.asarray(done) & ~seen
+        assert not np.asarray(info["violated"])[first].any()
+        seen |= np.asarray(done)
+    assert seen.all()
+
+
+def test_heuristic_greedy_feasible_at_n32():
+    """The feasibility-slack argument must survive large rounds: at
+    n_max=32 the remaining-average requirement has 0.1/32 granularity,
+    so the slack scales as ACC_TOL/remaining.  Zero violations across a
+    random fleet of full-size rounds."""
+    scn = random_fleet(jax.random.PRNGKey(6), 8, n_max=32,
+                       n_users_min=32)
+    cfg = FleetConfig(n_max=32, quiet=True)
+    env = make_fleet_env(cfg)
+    pol = heuristic_greedy_policy(cfg.spec())
+    params = refresh_params(pol, pol.init(jax.random.PRNGKey(0)), scn)
+    st = env.init(jax.random.PRNGKey(1), scn)
+    for t in range(32):
+        obs = env.observe(scn, st)
+        a = pol.act(params, obs, jax.random.PRNGKey(0))
+        st, _, _, done, info = env.step(scn, st, a)
+    assert np.asarray(done).all()
+    assert not np.asarray(info["violated"]).any()
+
+
+def test_heuristic_greedy_respects_max_constraint():
+    """At the Max level (89.9%) only d0-class actions qualify — greedy must
+    pick exclusively from {d0 local, edge, cloud}."""
+    scn = random_fleet(jax.random.PRNGKey(0), 8, n_max=4,
+                       constraint_pool=[CONSTRAINTS["Max"]])
+    cfg = FleetConfig(n_max=4, quiet=True)
+    env = make_fleet_env(cfg)
+    pol = heuristic_greedy_policy(cfg.spec())
+    params = refresh_params(pol, pol.init(jax.random.PRNGKey(0)), scn)
+    st = env.init(jax.random.PRNGKey(1), scn)
+    for _ in range(4):
+        obs = env.observe(scn, st)
+        a = np.asarray(pol.act(params, obs, jax.random.PRNGKey(0)))
+        assert np.all((a == 0) | (a == lm.A_EDGE) | (a == lm.A_CLOUD)), a
+        st, _, _, _, _ = env.step(scn, st, a)
+
+
+def test_oracle_policy_reproduces_exact_solver():
+    scn = random_fleet(jax.random.PRNGKey(2), 6, n_max=4)
+    cfg = FleetConfig(n_max=4, quiet=True)
+    env = make_fleet_env(cfg)
+    pol = oracle_policy(cfg.spec())
+    params = oracle_params(scn)
+    st = env.init(jax.random.PRNGKey(3), scn)
+    seen = np.zeros(6, bool)
+    art = np.zeros(6)
+    for _ in range(4):
+        obs = env.observe(scn, st)
+        a = pol.act(params, obs, jax.random.PRNGKey(0))
+        st, _, _, done, info = env.step(scn, st, a)
+        first = np.asarray(done) & ~seen
+        art[first] = np.asarray(info["art"])[first]
+        seen |= np.asarray(done)
+    ref = solve_fleet(scn)
+    np.testing.assert_allclose(art, ref["art"], atol=1e-4)
+
+
+# ------------------------------------------------------------------ bundles
+def test_bundle_roundtrip_rebuilds_identical_policy(tmp_path):
+    spec = make_spec("contention", 4)
+    pol = dqn_policy(spec, hidden=(32, 16))
+    params = pol.init(jax.random.PRNGKey(0))
+    path = str(tmp_path / "dqn.bundle.msgpack")
+    save_bundle(path, PolicyBundle(
+        kind="dqn", obs_spec="contention", n_max=4, params=params,
+        meta={"note": "roundtrip"}))
+    bundle = load_bundle(path, expect_spec="contention", expect_n_max=4)
+    assert bundle.meta["note"] == "roundtrip"
+    pol2, params2 = policy_from_bundle(bundle)
+    obs = jax.random.uniform(jax.random.PRNGKey(1), (5, spec.dim))
+    np.testing.assert_array_equal(
+        np.asarray(pol.act(params, obs, jax.random.PRNGKey(2))),
+        np.asarray(pol2.act(params2, obs, jax.random.PRNGKey(2))))
+
+
+def test_bundle_refuses_mismatched_spec_expectation(tmp_path):
+    spec = make_spec("base", 5)
+    pol = dqn_policy(spec)
+    path = str(tmp_path / "b.msgpack")
+    save_bundle(path, PolicyBundle(
+        kind="dqn", obs_spec="base", n_max=5,
+        params=pol.init(jax.random.PRNGKey(0))))
+    with pytest.raises(SpecMismatchError):
+        load_bundle(path, expect_spec="full")
+    with pytest.raises(SpecMismatchError):
+        load_bundle(path, expect_n_max=32)
+    load_bundle(path, expect_spec="base", expect_n_max=5)  # exact: fine
+
+
+def test_bundle_refuses_params_contradicting_declared_spec(tmp_path):
+    """Declared spec and actual network width must agree — a base/n=5 net
+    cannot be declared (and later driven) as full/n=32."""
+    params = dqn_policy(make_spec("base", 5)).init(jax.random.PRNGKey(0))
+    with pytest.raises(SpecMismatchError):
+        save_bundle(str(tmp_path / "bad.msgpack"), PolicyBundle(
+            kind="dqn", obs_spec="full", n_max=32, params=params))
+
+
+# ------------------------------------------------------------------ gateway
+def test_replay_trace_round_metrics_against_oracle():
+    """Open-loop Poisson replay: per-round rows, request accounting, and
+    the solver-oracle reference; the greedy baseline serves violation-free
+    at ART >= the exact optimum."""
+    scn = random_fleet(jax.random.PRNGKey(11), 8, n_max=4)
+    cfg = FleetConfig(n_max=4, quiet=True)
+    trace = poisson_round_trace(jax.random.PRNGKey(12), scn, 5, rate=2.0)
+    pol = heuristic_greedy_policy(cfg.spec())
+    rep = replay_trace(pol, pol.init(jax.random.PRNGKey(0)), scn, trace,
+                       cfg, key=jax.random.PRNGKey(13))
+    assert rep["n_rounds"] == 5 and len(rep["rounds"]) == 5
+    assert rep["served_requests"] == int(np.asarray(trace).sum())
+    assert rep["violation_rate"] == 0.0
+    for row in rep["rounds"]:
+        # f32 env metrics vs f64 solver: equality up to float noise
+        assert row["mean_art_ms"] >= row["opt_art_ms"] - 1e-2
+        assert row["served_requests"] > 0
+    # oracle replay of the same trace is violation-free AND optimal
+    opol = oracle_policy(cfg.spec())
+    oracle = solve_oracle(scn)
+    orep = replay_trace(opol, oracle_params(scn, oracle), scn, trace, cfg,
+                        key=jax.random.PRNGKey(13), oracle=oracle)
+    assert orep["violation_rate"] == 0.0
+    for row in orep["rounds"]:
+        np.testing.assert_allclose(row["mean_art_ms"], row["opt_art_ms"],
+                                   atol=1e-3)
+    assert rep["mean_art_ms"] >= orep["mean_art_ms"] - 1e-2
+
+
+def test_gateway_rejects_host_side_qtable_policy():
+    """The gateway jit-compiles Policy.act; the tabular adapter is
+    host-side and must be rejected up front with a clear error, not a
+    mid-trace crash."""
+    scn = random_fleet(jax.random.PRNGKey(0), 4, n_max=3)
+    cfg = FleetConfig(n_max=3)
+    trace = poisson_round_trace(jax.random.PRNGKey(1), scn, 2)
+    pol = qtable_policy()
+    with pytest.raises(ValueError, match="host-side"):
+        replay_trace(pol, {}, scn, trace, cfg,
+                     oracle=solve_oracle(scn))
+    assert pol.jittable is False and dqn_policy(3).jittable is True
+
+
+def test_gateway_serves_trained_dqn_bundle(tmp_path):
+    """A dqn PolicyBundle (fresh params — serving correctness, not
+    quality) replays through the gateway under its recorded spec."""
+    spec = make_spec("full", 3)
+    pol = dqn_policy(spec)
+    path = str(tmp_path / "dqn.msgpack")
+    save_bundle(path, PolicyBundle(
+        kind="dqn", obs_spec="full", n_max=3,
+        params=pol.init(jax.random.PRNGKey(0))))
+    bundle = load_bundle(path)
+    pol2, params = policy_from_bundle(bundle)
+    scn = random_fleet(jax.random.PRNGKey(1), 6, n_max=3)
+    cfg = FleetConfig(n_max=3, obs_spec="full")
+    trace = poisson_round_trace(jax.random.PRNGKey(2), scn, 3, rate=2.0)
+    rep = replay_trace(pol2, params, scn, trace, cfg,
+                       key=jax.random.PRNGKey(3))
+    assert rep["n_rounds"] == 3
+    assert 0.0 <= rep["violation_rate"] <= 1.0
+    assert np.isfinite(rep["mean_art_ms"])
