@@ -1,21 +1,31 @@
-"""Served-traffic benchmark: PolicyBundles through the trace-driven fleet
-serving gateway.
+"""Served-traffic benchmark: PolicyBundles through the serving stack.
 
     PYTHONPATH=src python -m benchmarks.serve [--smoke]
         [--cells 64] [--rounds 40] [--out BENCH_serve.json]
 
-End-to-end exercise of the Unified Policy API: train a fleet policy with
+End-to-end exercise of the serving surface: train a fleet policy with
 ``repro.hltrain``, save it as a versioned PolicyBundle, load the bundle
-back, and replay an open-loop Poisson round trace through
-``repro.launch.serve_fleet`` — alongside the parameter-free latency-greedy
-baseline bundle, both scored against the exact ``fleet.solver`` oracle on
-the *same* fleet and trace.
+back, and serve the *same* open-loop Poisson traffic through it twice —
 
-Writes ``BENCH_serve.json``: per-policy served-traffic ``violation_rate``
-(the serving acceptance metric), request-weighted ART vs the solver
-optimum, paper reward, and steady-state gateway ``decisions_per_s``.
-``--smoke`` shrinks training to a minutes-scale CI job and marks the JSON
-``smoke: true``.
+* round replay (``repro.serve.compat.replay_trace``): the demoted
+  round-synchronous gateway, round-mean metrics vs the exact solver
+  oracle, labeled with the burst mass its ``[1, n_max]`` clipping
+  discarded;
+* request stream (``repro.serve.engine.serve_stream``): the
+  event-driven request-level engine on an unclipped continuous-time
+  trace of the same offered load, reporting per-request p50/p95/p99
+  end-to-end latency, SLO attainment, and drop/defer counts —
+
+alongside the parameter-free latency-greedy baseline bundle and the
+hltrain bundle wrapped in the ``slo_guarded`` combinator
+(``hltrain_guarded``), which trades tail latency for the greedy
+baseline's zero accuracy-violation property.
+
+Writes ``BENCH_serve.json`` with per-policy round-level figures
+(``violation_rate``, request-weighted ART vs optimum, ``decisions_per_s``)
+and request-level figures (``p50/p95/p99_latency_ms``, ``slo_attainment``,
+``dropped_requests``, ``request_decisions_per_s``).  ``--smoke`` shrinks
+training to a minutes-scale CI job and marks the JSON ``smoke: true``.
 """
 from __future__ import annotations
 
@@ -28,13 +38,15 @@ import jax
 from repro.fleet import FleetConfig, curriculum_fleets, random_fleet
 from repro.fleet.workload import poisson_round_trace
 from repro.hltrain import FleetHLParams, make_hl_trainer, run_curriculum
-from repro.launch.serve_fleet import replay_trace
+from repro.launch.serve_fleet import guarded_bundle_policy, replay_trace
 from repro.policy import (PolicyBundle, heuristic_greedy_policy,
                           load_bundle, policy_from_bundle, save_bundle,
                           solve_oracle)
+from repro.serve import ServeConfig, poisson_request_stream, serve_stream
 
 N_MAX = 5
 OBS_SPEC = "full"
+TICK_MS = 50.0
 
 
 def train_hltrain_bundle(path: str, cells: int, hp: FleetHLParams,
@@ -85,43 +97,85 @@ def main(smoke: bool = False, cells: int = 64, rounds: int = 40,
     train_hltrain_bundle(bundles["hltrain"], cells, hp, chunk)
     save_greedy_bundle(bundles["greedy"])
 
-    # one shared serving fleet + trace + solver-oracle tables: every
-    # bundle answers the same open-loop traffic
-    k_fleet, k_trace, k_serve = jax.random.split(jax.random.PRNGKey(42), 3)
+    # one shared serving fleet + the SAME offered load in both
+    # abstractions: a clipped round trace and an unclipped request stream
+    k_fleet, k_trace, k_serve, k_guard = jax.random.split(
+        jax.random.PRNGKey(42), 4)
     scenario = random_fleet(k_fleet, cells, n_max=N_MAX)
-    trace = poisson_round_trace(k_trace, scenario, rounds, rate=rate)
+    trace, trace_stats = poisson_round_trace(k_trace, scenario, rounds,
+                                             rate=rate, with_stats=True)
     oracle = solve_oracle(scenario)
     cfg = FleetConfig(n_max=N_MAX, obs_spec=OBS_SPEC)
+    scfg = ServeConfig(n_max=N_MAX, obs_spec=OBS_SPEC, tick_ms=TICK_MS)
+    horizon_ms = rounds * scfg.round_ms
+    stream = poisson_request_stream(k_trace, scenario, horizon_ms,
+                                    rate=rate, round_ms=scfg.round_ms,
+                                    epoch_ms=horizon_ms / 5)
 
+    loaded = {name: load_bundle(path, expect_spec=OBS_SPEC,
+                                expect_n_max=N_MAX)
+              for name, path in bundles.items()}
+    served = {name: policy_from_bundle(b) for name, b in loaded.items()}
+    served["hltrain_guarded"] = guarded_bundle_policy(loaded["hltrain"],
+                                                      k_guard)
+
+    rnd = lambda v, d: None if v is None else round(v, d)
     policies = {}
-    for name, path in bundles.items():
-        bundle = load_bundle(path, expect_spec=OBS_SPEC,
-                             expect_n_max=N_MAX)
-        policy, params = policy_from_bundle(bundle)
+    for name, (policy, params) in served.items():
         rep = replay_trace(policy, params, scenario, trace, cfg,
                            key=k_serve, oracle=oracle)
+        req = serve_stream(policy, params, scenario, stream, scfg,
+                           key=k_serve)
         policies[name] = {
+            # round-replay compat figures
             "violation_rate": rep["violation_rate"],
             "mean_art_ms": round(rep["mean_art_ms"], 2),
             "opt_art_ms": round(rep["opt_art_ms"], 2),
             "mean_reward": round(rep["mean_reward"], 4),
             "opt_reward": round(rep["opt_reward"], 4),
             "served_requests": rep["served_requests"],
-            "decisions_per_s": round(rep["decisions_per_s"], 1),
+            "decisions_per_s": rnd(rep["decisions_per_s"], 1),
+            # request-level figures
+            "p50_latency_ms": rnd(req["p50_latency_ms"], 2),
+            "p95_latency_ms": rnd(req["p95_latency_ms"], 2),
+            "p99_latency_ms": rnd(req["p99_latency_ms"], 2),
+            "slo_attainment": round(req["slo_attainment"], 4),
+            "request_violation_rate": round(req["violation_rate"], 4),
+            "served_request_level": req["served_requests"],
+            "dropped_requests": req["dropped_requests"],
+            "deferred_requests": req["deferred_requests"],
+            "request_decisions_per_s": rnd(req["decisions_per_s"], 1),
         }
-        print(f"— {name}-bundle served {rep['served_requests']:,} requests: "
+        print(f"— {name}: round replay {rep['served_requests']:,} req, "
               f"ART {rep['mean_art_ms']:.1f} ms "
               f"(opt {rep['opt_art_ms']:.1f}), violations "
               f"{rep['violation_rate']:.1%}, "
-              f"{rep['decisions_per_s']:,.0f} decisions/s —")
+              f"{rep['decisions_per_s'] or 0:,.0f} dec/s —")
+        print(f"  request level: {req['served_requests']:,}/"
+              f"{req['n_requests']:,} served "
+              f"({req['dropped_requests']} dropped), p50/p95/p99 "
+              f"{req['p50_latency_ms'] or 0:.0f}/"
+              f"{req['p95_latency_ms'] or 0:.0f}/"
+              f"{req['p99_latency_ms'] or 0:.0f} ms, SLO "
+              f"{req['slo_attainment']:.1%}, violations "
+              f"{req['violation_rate']:.1%}, "
+              f"{req['decisions_per_s'] or 0:,.0f} dec/s")
 
     result = {
         "smoke": smoke,
         "n_cells": cells, "n_rounds": rounds, "rate": rate,
-        "n_max": N_MAX, "obs_spec": OBS_SPEC,
+        "n_max": N_MAX, "obs_spec": OBS_SPEC, "tick_ms": TICK_MS,
+        "trace_stats": trace_stats,
+        "stream_requests": stream.n_requests,
         "policies": policies,
-        "decisions_per_s": max(p["decisions_per_s"]
-                               for p in policies.values()),
+        "decisions_per_s": max((p["decisions_per_s"]
+                                for p in policies.values()
+                                if p["decisions_per_s"] is not None),
+                               default=None),
+        "request_decisions_per_s": max(
+            (p["request_decisions_per_s"] for p in policies.values()
+             if p["request_decisions_per_s"] is not None),
+            default=None),
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)

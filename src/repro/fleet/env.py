@@ -253,6 +253,11 @@ def make_fleet_env(cfg: FleetConfig) -> FleetEnvFns:
         )
         info = {"art": art, "acc": acc, "violated": violated,
                 "t_ms": jnp.where(done, t_i + jnp.maximum(0.0, settle), t_i),
+                # (C, n_max) per-slot response times under the current
+                # assignment; at ``done`` this is the completed round's
+                # final per-request service latency (padded slots zero) —
+                # what the request-level serving engine records per request
+                "times": times * mask,
                 "actions": acts}
         return state2, observe(scenario, state2), reward, done, info
 

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from repro.fleet.env import FleetConfig, make_fleet_env
 from repro.fleet.workload import FleetScenario
 from repro.policy.adapters import dqn_policy
-from repro.policy.api import Policy
+from repro.policy.api import Policy, act_batch
 
 
 def run_policy_round(env, policy: Policy, cfg: FleetConfig, params,
@@ -35,15 +35,19 @@ def run_policy_round(env, policy: Policy, cfg: FleetConfig, params,
     decision steps from ``state`` and gather each cell's *first* completed
     round (a cell completes at step n_users-1; cells with few users
     auto-reset and may complete again — take the first).  Traceable: the
-    evaluator and the serving gateway both jit through here, so the
-    round-completion semantics live in exactly one place.  Returns
-    ``(state', {"art", "acc", "violated"})`` with (C,) info arrays."""
+    evaluator and the round-replay gateway both jit through here, so the
+    round-completion semantics live in exactly one place.  Decisions go
+    through ``act_batch`` so round-size-conditioned policies see this
+    round's ``scenario.n_users`` even if the caller forgot ``refresh``.
+    Returns ``(state', {"art", "acc", "violated"})`` with (C,) info
+    arrays."""
 
     def body(carry, _):
         st, k = carry
         k, k_act = jax.random.split(k)
         obs = env.observe(scenario, st)
-        a = policy.act(params, obs, k_act)
+        a = act_batch(policy, params, obs, k_act,
+                      n_users=scenario.n_users)
         st, _, _, done, info = env.step(scenario, st, a)
         return (st, k), (done, info["art"], info["acc"],
                          info["violated"])

@@ -173,14 +173,44 @@ def curriculum_fleets(key, n_cells: int, epochs: int, *, start: int = 2,
 
 
 def poisson_round_trace(key, scenario: FleetScenario, horizon: int,
-                        rate: float | jnp.ndarray = 3.0) -> jnp.ndarray:
+                        rate: float | jnp.ndarray = 3.0, *,
+                        with_stats: bool = False):
     """(horizon, C) per-round request-arrival counts for open-loop replay.
 
-    Counts are Poisson(rate) clipped to [1, n_max] (a round with zero
+    Counts are Poisson(rate) clipped to [1, n_max]: a round with zero
     requests is skipped by the paper's round abstraction, so the floor is
-    one request).  Feed row ``t`` back as ``scenario._replace(n_users=...)``
-    to replay the trace through a jitted ``FleetEnv``.
+    one request, and a burst beyond ``n_max`` cannot be represented, so
+    its excess mass is silently discarded.  ``repro.serve``'s
+    ``RequestStream`` is the abstraction without either distortion —
+    bursts queue, idle cells idle; this trace remains the round-replay
+    compat path.  ``rate`` may be a scalar or a per-cell ``(C,)`` array
+    (heterogeneous traffic).  Feed row ``t`` back as
+    ``scenario._replace(n_users=...)`` to replay the trace through a
+    jitted ``FleetEnv``.
+
+    ``with_stats=True`` additionally returns an honesty label for the
+    clipping: ``clipped_fraction`` (share of raw Poisson request mass
+    discarded by the ``n_max`` ceiling), ``floor_fraction`` (share of
+    *served* requests that are phantom floor-fills of empty rounds), and
+    the raw/served totals — report these next to any round-replay metric.
     """
+    rate = jnp.broadcast_to(jnp.asarray(rate, jnp.float32),
+                            (scenario.n_cells,))
     counts = jax.random.poisson(key, rate,
                                 (horizon, scenario.n_cells)).astype(jnp.int32)
-    return jnp.clip(counts, 1, scenario.n_max)
+    trace = jnp.clip(counts, 1, scenario.n_max)
+    if not with_stats:
+        return trace
+    raw = int(counts.sum())
+    clipped = int(jnp.maximum(counts - scenario.n_max, 0).sum())
+    floored = int((counts == 0).sum())
+    served = int(trace.sum())
+    stats = {
+        "raw_requests": raw,
+        "served_requests": served,
+        "clipped_requests": clipped,
+        "clipped_fraction": clipped / raw if raw else 0.0,
+        "floored_rounds": floored,
+        "floor_fraction": floored / served if served else 0.0,
+    }
+    return trace, stats

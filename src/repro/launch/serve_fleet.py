@@ -1,189 +1,156 @@
-"""Trace-driven fleet serving gateway: replay open-loop Poisson traffic
-through any PolicyBundle (the paper's Fig. 1 deployment loop, fleet-scale).
+"""Fleet serving CLI — request-level by default, round replay as compat.
 
     PYTHONPATH=src python -m repro.launch.serve_fleet \
         --bundle results/hl_fleet.bundle.msgpack --rounds 50 \
-        [--cells 64] [--rate 3.0] [--seed 0] [--quiet] [--out serve.json]
+        [--cells 64] [--rate 3.0] [--seed 0] [--quiet] [--guard] \
+        [--tick-ms 50] [--queue-cap 64] [--epochs 5] \
+        [--round-replay] [--out serve.json]
 
-Per round the gateway draws the next row of a
-``fleet.workload.poisson_round_trace`` (per-cell request-arrival counts),
-swaps it into the fleet scenario at a round boundary (``reset_rounds``),
-refreshes scenario-borne policy params (``Policy.refresh``), and serves
-the whole round through one jitted ``lax.scan`` — every decision of every
-cell goes through the bundle's ``Policy.act``.  Per-round fleet metrics
-(request-weighted latency, accuracy-violation rate, paper reward) are
-reported against the exact ``fleet.solver`` optimum for that round's user
-counts, precomputed once per (cell, n) via ``policy.solve_oracle``.
+This module is a thin shell over ``repro.serve``: it loads a
+PolicyBundle, builds a held-out random fleet at the bundle's recorded
+(spec, n_max) — reproducing any shared-cloud / shared-edge coupling
+regime its metadata records — and serves open-loop Poisson traffic
+through the bundle's ``Policy``:
 
-The bundle's recorded observation spec decides the gateway's encoding
-end-to-end; loading a bundle under a different spec/n_max raises before a
-single request is served.
+* default: a continuous-time ``RequestStream`` (per-request arrival
+  timestamps, per-cell SLO deadlines, *no* ``[1, n_max]`` clipping —
+  bursts queue, idle cells idle) through the jitted request-level engine,
+  reporting p50/p95/p99 end-to-end latency, SLO attainment, and
+  drop/defer counts.  ``--guard`` wraps the bundle in the
+  ``slo_guarded`` combinator: any pick predicted to make the round's
+  accuracy constraint unsatisfiable is replaced by the
+  feasibility-preserving greedy action.
+* ``--round-replay``: the demoted round-synchronous gateway
+  (``repro.serve.compat.replay_trace``) with round-mean metrics vs the
+  exact solver oracle, labeled with the fraction of burst mass the round
+  abstraction clipped.
+
+The bundle's recorded observation spec decides the encoding end-to-end;
+loading a bundle under a different spec/n_max raises before a single
+request is served.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.env.edge_cloud import REWARD_SCALE
-from repro.fleet.env import FleetConfig, make_fleet_env
-from repro.fleet.evaluate import run_policy_round
-from repro.fleet.workload import (FleetScenario, poisson_round_trace,
-                                  random_fleet)
-from repro.hltrain.metrics import reward_from_round
-from repro.policy.api import Policy, refresh_params
+from repro.fleet.env import FleetConfig
+from repro.fleet.workload import poisson_round_trace, random_fleet
+from repro.policy.adapters import (heuristic_greedy_policy, slo_guarded,
+                                   slo_guarded_params, solve_oracle)
+from repro.policy.api import Policy
 from repro.policy.bundle import load_bundle, policy_from_bundle
-from repro.policy.adapters import solve_oracle
+from repro.serve import (ServeConfig, poisson_request_stream, serve_stream)
+# compat re-exports: tests and benchmarks historically import the round
+# gateway from this module
+from repro.serve.compat import make_gateway, replay_trace  # noqa: F401
 
 
-def make_gateway(policy: Policy, cfg: FleetConfig):
-    """Jitted one-round server: ``serve_round(params, scenario, state,
-    key) -> (state', info)`` aborts in-flight rounds (the trace swapped
-    ``n_users``), then scans ``n_max`` fleet-wide decisions through
-    ``policy.act``; ``info`` holds each cell's *first* completed round
-    (art/acc/violated, (C,))."""
-    if not policy.jittable:
-        raise ValueError(
-            f"the fleet gateway jit-compiles Policy.act, but the "
-            f"{policy.kind!r} adapter is host-side (jittable=False); "
-            f"drive it through the single-cell harnesses "
-            f"(EdgeCloudEnv.rollout_greedy / IntelligentOrchestrator) "
-            f"instead")
-    env = make_fleet_env(cfg)
-
-    @jax.jit
-    def serve_round(params, scenario: FleetScenario, state, key):
-        return run_policy_round(env, policy, cfg, params, scenario,
-                                env.reset_rounds(state), key)
-
-    return env, serve_round
-
-
-def replay_trace(policy: Policy, params, scenario: FleetScenario,
-                 trace, cfg: FleetConfig, *, key=None,
-                 oracle: dict | None = None) -> dict:
-    """Open-loop replay of a (T, C) per-round arrival trace.  Returns
-    ``{"rounds": [per-round dicts], **summary}``; pass precomputed
-    ``solve_oracle(scenario)`` tables to skip re-solving."""
-    key = jax.random.PRNGKey(0) if key is None else key
-    if oracle is None:
-        oracle = solve_oracle(scenario)
-    opt_art_table = np.asarray(oracle["art"])     # (C, n_max)
-    constraint = np.asarray(scenario.constraint)
-    cells = np.arange(scenario.n_cells)
-    trace = np.asarray(trace)
-
-    env, serve_round = make_gateway(policy, cfg)
-    k_env, key = jax.random.split(key)
-    state = env.init(k_env, scenario)
-
-    rounds = []
-    decisions = 0
-    wall_serving = 0.0
-    for t in range(trace.shape[0]):
-        n_t = trace[t]
-        scn_t = scenario._replace(n_users=jnp.asarray(n_t))
-        params_t = refresh_params(policy, params, scn_t)
-        key, k_round = jax.random.split(key)
-        t0 = time.perf_counter()
-        state, info = jax.block_until_ready(
-            serve_round(params_t, scn_t, state, k_round))
-        dt = time.perf_counter() - t0
-        if t > 0:          # round 0 pays the XLA compile; keep it out of
-            wall_serving += dt  # the steady-state throughput figure
-            decisions += scenario.n_cells * cfg.n_max
-        art = np.asarray(info["art"])
-        acc = np.asarray(info["acc"])
-        violated = np.asarray(info["violated"])
-        served = int(n_t.sum())
-        opt_art = opt_art_table[cells, n_t - 1]
-        reward = reward_from_round(art, acc, constraint)
-        # latency AND violation exposure are request-weighted: a cell
-        # serving 5 requests in a violating round counts 5× a singleton
-        rounds.append({
-            "round": t, "served_requests": served,
-            "mean_art_ms": float((art * n_t).sum() / served),
-            "opt_art_ms": float((opt_art * n_t).sum() / served),
-            "violation_rate": float((violated * n_t).sum() / served),
-            "mean_reward": float(reward.mean()),   # per cell-round
-            "opt_reward": float((-opt_art / REWARD_SCALE).mean()),
-        })
-
-    served_total = int(trace.sum())
-    wmean = lambda k: float(sum(r[k] * r["served_requests"]
-                                for r in rounds) / served_total)
-    mean = lambda k: float(np.mean([r[k] for r in rounds]))
-    return {
-        "rounds": rounds,
-        "n_rounds": len(rounds),
-        "n_cells": scenario.n_cells,
-        "served_requests": served_total,
-        "mean_art_ms": wmean("mean_art_ms"),
-        "opt_art_ms": wmean("opt_art_ms"),
-        "violation_rate": wmean("violation_rate"),
-        "mean_reward": mean("mean_reward"),
-        "opt_reward": mean("opt_reward"),
-        # None (JSON null) when there is no steady-state window — a
-        # 1-round trace only has the compile-bearing round 0
-        "decisions_per_s": (decisions / wall_serving
-                            if decisions and wall_serving > 0 else None),
-    }
+def guarded_bundle_policy(bundle, key) -> tuple[Policy, object]:
+    """Wrap a loaded bundle's (policy, params) in the ``slo_guarded``
+    combinator with the greedy heuristic as fallback."""
+    policy, params = policy_from_bundle(bundle)
+    spec = bundle.spec()
+    fallback = heuristic_greedy_policy(spec)
+    return (slo_guarded(policy, spec, fallback),
+            slo_guarded_params(params, fallback.init(key)))
 
 
 def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
                  rate: float = 3.0, seed: int = 0, quiet: bool = False,
+                 guard: bool = False, tick_ms: float = 50.0,
+                 queue_cap: int = 64, epochs: int = 5,
+                 round_replay: bool = False,
                  verbose: bool = True) -> dict:
     """Load a PolicyBundle, build a held-out random fleet at the bundle's
-    (spec, n_max) — reproducing any shared-cloud / shared-edge coupling
-    regime the bundle's metadata records from training — and replay a
-    Poisson round trace through it."""
+    (spec, n_max), and serve ``rounds`` round-durations' worth of Poisson
+    traffic through it — request-level by default, round replay with
+    ``round_replay=True``.  The returned request-level report carries the
+    raw per-request arrays under ``"records"`` (stripped before JSON)."""
     bundle = load_bundle(bundle_path)
-    policy, params = policy_from_bundle(bundle)
     meta = bundle.meta
-    cfg = FleetConfig(n_max=bundle.n_max, obs_spec=bundle.obs_spec,
-                      quiet=quiet,
-                      shared_cloud=bool(meta.get("shared_cloud", False)),
-                      shared_edge=bool(meta.get("shared_edge", False)))
-    k_fleet, k_trace, k_serve = jax.random.split(
-        jax.random.PRNGKey(seed), 3)
+    k_fleet, k_trace, k_serve, k_guard = jax.random.split(
+        jax.random.PRNGKey(seed), 4)
     scenario = random_fleet(
         k_fleet, cells, n_max=bundle.n_max,
         cells_per_edge=int(meta.get("cells_per_edge", 1)))
-    trace = poisson_round_trace(k_trace, scenario, rounds, rate=rate)
+    couplings = dict(shared_cloud=bool(meta.get("shared_cloud", False)),
+                     shared_edge=bool(meta.get("shared_edge", False)))
+    if guard:
+        policy, params = guarded_bundle_policy(bundle, k_guard)
+    else:
+        policy, params = policy_from_bundle(bundle)
+
     if verbose:
-        couplings = [c for c in ("shared_cloud", "shared_edge")
-                     if getattr(cfg, c)] or ["uncoupled"]
-        print(f"bundle {bundle_path}: kind {bundle.kind!r}, obs spec "
+        on = [c for c, v in couplings.items() if v] or ["uncoupled"]
+        print(f"bundle {bundle_path}: kind {policy.kind!r}, obs spec "
               f"{bundle.obs_spec!r}, n_max={bundle.n_max} "
               f"(schema v{bundle.version})")
-        print(f"serving fleet: {cells} cells ({', '.join(couplings)}), "
-              f"Poisson(rate={rate}) trace, {rounds} rounds, background "
-              f"{'quiet' if quiet else 'fluctuating'}")
-    report = replay_trace(policy, params, scenario, trace, cfg,
-                          key=k_serve)
-    if verbose:
-        for r in report["rounds"]:
-            print(f"  round {r['round']:3d}: {r['served_requests']:4d} req, "
-                  f"ART {r['mean_art_ms']:7.1f} ms "
-                  f"(opt {r['opt_art_ms']:7.1f}), "
-                  f"violations {r['violation_rate']:6.1%}, "
-                  f"reward {r['mean_reward']:+.3f}")
-        dps = report["decisions_per_s"]
-        print(f"\nserved {report['served_requests']:,} requests over "
-              f"{report['n_rounds']} rounds: "
-              f"ART {report['mean_art_ms']:.1f} ms vs solver-optimal "
-              f"{report['opt_art_ms']:.1f} ms, "
-              f"violation rate {report['violation_rate']:.1%}, "
-              + (f"{dps:,.0f} decisions/s steady-state" if dps
-                 else "no steady-state window (single round)"))
+        print(f"serving fleet: {cells} cells ({', '.join(on)}), "
+              f"Poisson(rate={rate}), background "
+              f"{'quiet' if quiet else 'fluctuating'}, "
+              f"{'round replay' if round_replay else 'request stream'}")
+
+    if round_replay:
+        cfg = FleetConfig(n_max=bundle.n_max, obs_spec=bundle.obs_spec,
+                          quiet=quiet, **couplings)
+        trace, stats = poisson_round_trace(k_trace, scenario, rounds,
+                                           rate=rate, with_stats=True)
+        report = replay_trace(policy, params, scenario, trace, cfg,
+                              key=k_serve, oracle=solve_oracle(scenario),
+                              trace_stats=stats)
+        if verbose:
+            for r in report["rounds"]:
+                print(f"  round {r['round']:3d}: "
+                      f"{r['served_requests']:4d} req, "
+                      f"ART {r['mean_art_ms']:7.1f} ms "
+                      f"(opt {r['opt_art_ms']:7.1f}), "
+                      f"violations {r['violation_rate']:6.1%}")
+            dps = report["decisions_per_s"]
+            print(f"\nround replay served "
+                  f"{report['served_requests']:,} requests "
+                  f"({stats['clipped_fraction']:.1%} of raw burst mass "
+                  f"clipped by the round abstraction): "
+                  f"ART {report['mean_art_ms']:.1f} ms vs solver-optimal "
+                  f"{report['opt_art_ms']:.1f} ms, violation rate "
+                  f"{report['violation_rate']:.1%}"
+                  + (f", {dps:,.0f} decisions/s" if dps else ""))
+    else:
+        cfg = ServeConfig(n_max=bundle.n_max, obs_spec=bundle.obs_spec,
+                          quiet=quiet, tick_ms=tick_ms,
+                          queue_cap=queue_cap, **couplings)
+        horizon_ms = rounds * cfg.round_ms
+        stream = poisson_request_stream(
+            k_trace, scenario, horizon_ms, rate=rate,
+            round_ms=cfg.round_ms,
+            epoch_ms=horizon_ms / max(1, epochs))
+        report = serve_stream(policy, params, scenario, stream, cfg,
+                              key=k_serve, verbose=verbose)
+        report["horizon_ms"] = horizon_ms
+        if verbose:
+            dps = report["decisions_per_s"]
+            tail = (f"latency p50/p95/p99 "
+                    f"{report['p50_latency_ms']:.0f}/"
+                    f"{report['p95_latency_ms']:.0f}/"
+                    f"{report['p99_latency_ms']:.0f} ms, "
+                    if report["served_requests"] else "")
+            print(f"\nserved {report['served_requests']:,}/"
+                  f"{report['n_requests']:,} requests over "
+                  f"{horizon_ms:.0f} ms "
+                  f"({report['dropped_requests']} dropped, "
+                  f"{report['deferred_requests']} deferred): " + tail +
+                  f"SLO attainment {report['slo_attainment']:.1%}, "
+                  f"accuracy violations {report['violation_rate']:.1%}"
+                  + (f", {dps:,.0f} decisions/s steady-state" if dps
+                     else " (no steady-state window)"))
+
     report["bundle"] = {"path": bundle_path, "kind": bundle.kind,
                         "obs_spec": bundle.obs_spec,
                         "n_max": bundle.n_max,
-                        "version": bundle.version}
+                        "version": bundle.version,
+                        "guarded": bool(guard)}
     return report
 
 
@@ -191,20 +158,38 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--bundle", required=True,
                     help="PolicyBundle checkpoint (see rl_train --ckpt)")
-    ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--rounds", type=int, default=50,
+                    help="traffic duration in round-durations "
+                         "(horizon = rounds * n_max * tick_ms)")
     ap.add_argument("--cells", type=int, default=64)
     ap.add_argument("--rate", type=float, default=3.0,
                     help="Poisson mean arrivals per cell per round")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quiet", action="store_true",
                     help="disable background fluctuations")
+    ap.add_argument("--guard", action="store_true",
+                    help="wrap the bundle in slo_guarded: fall back to "
+                         "the greedy action on picks predicted to "
+                         "violate the accuracy constraint")
+    ap.add_argument("--tick-ms", type=float, default=50.0)
+    ap.add_argument("--queue-cap", type=int, default=64)
+    ap.add_argument("--epochs", type=int, default=5,
+                    help="stream epochs (param-refresh / hot-swap "
+                         "boundaries)")
+    ap.add_argument("--round-replay", action="store_true",
+                    help="compat mode: round-synchronous trace replay "
+                         "with round-mean metrics vs the solver oracle")
     ap.add_argument("--out", default=None,
-                    help="write the replay report as JSON")
+                    help="write the serving report as JSON")
     args = ap.parse_args()
     report = serve_bundle(args.bundle, rounds=args.rounds,
                           cells=args.cells, rate=args.rate,
-                          seed=args.seed, quiet=args.quiet)
+                          seed=args.seed, quiet=args.quiet,
+                          guard=args.guard, tick_ms=args.tick_ms,
+                          queue_cap=args.queue_cap, epochs=args.epochs,
+                          round_replay=args.round_replay)
     if args.out:
+        report.pop("records", None)  # raw numpy arrays, not JSON
         with open(args.out, "w") as f:
             json.dump(report, f, indent=2)
         print("wrote", args.out)

@@ -8,20 +8,21 @@ plus versioned PolicyBundle checkpoints.
     bundle    self-describing versioned checkpoints (params + spec name +
               n_max + schema version) with defensive load
 """
-from repro.policy.api import Policy, act_single, refresh_params
+from repro.policy.api import Policy, act_batch, act_single, refresh_params
 from repro.policy.adapters import (dqn_policy, epsilon_greedy,
                                    heuristic_greedy_policy, obs_table_key,
                                    oracle_params, oracle_policy,
-                                   qtable_policy, solve_oracle)
+                                   qtable_policy, slo_guarded,
+                                   slo_guarded_params, solve_oracle)
 from repro.policy.bundle import (BUNDLE_VERSION, BundleError, PolicyBundle,
                                  SpecMismatchError, load_bundle,
                                  policy_from_bundle, save_bundle)
 
 __all__ = [
-    "Policy", "act_single", "refresh_params",
+    "Policy", "act_batch", "act_single", "refresh_params",
     "dqn_policy", "epsilon_greedy", "heuristic_greedy_policy",
     "obs_table_key", "oracle_params", "oracle_policy", "qtable_policy",
-    "solve_oracle",
+    "slo_guarded", "slo_guarded_params", "solve_oracle",
     "BUNDLE_VERSION", "BundleError", "PolicyBundle", "SpecMismatchError",
     "load_bundle", "policy_from_bundle", "save_bundle",
 ]

@@ -16,10 +16,16 @@
                              table, looked up by the round cursor
     epsilon_greedy           exploration combinator over any jit-able
                              policy (uses the protocol's PRNG key)
+    slo_guarded              feasibility guard combinator: serves the
+                             wrapped policy's pick unless it is predicted
+                             to make the round's accuracy constraint
+                             unsatisfiable, in which case the fallback
+                             (default: the greedy heuristic) serves
 
 Scenario-borne adapters (greedy, oracle) keep constraints / user counts /
-the solver table in *params* and re-derive them via ``Policy.refresh`` —
-see ``repro.policy.api``.
+the solver table in *params* and re-derive them via ``Policy.refresh``;
+they also expose ``with_users`` so request-level harnesses can rebind
+per-cell round sizes inside jit (see ``repro.policy.api``).
 """
 from __future__ import annotations
 
@@ -52,6 +58,22 @@ def _require_base_first(spec) -> int:
         assert spec.blocks[0] == "base", spec
         return spec.n_max
     return int(spec)
+
+
+# accuracy per action: the 8 model tiers, then edge/cloud which both run
+# the d0 (most accurate) variant
+_ACC_MENU = jnp.asarray(np.concatenate(
+    [lm.ACCURACY, [lm.ACCURACY[0], lm.ACCURACY[0]]]), jnp.float32)
+
+
+def _round_progress(obs, n_max: int, n):
+    """Decode (cursor, committed accuracy sum, remaining users incl. the
+    cursor's) from the base observation block — shared by every adapter
+    that reasons about round-accuracy feasibility."""
+    u = jnp.argmax(obs[:, :n_max], -1)
+    committed = obs[:, 4 * n_max + 6] * ACC_NORM * n
+    remaining = jnp.maximum(1.0, n - u)
+    return u, committed, remaining
 
 
 # --------------------------------------------------------------------- dqn
@@ -89,7 +111,8 @@ def epsilon_greedy(policy: Policy, n_actions: int,
 
     return Policy(f"eps-{policy.kind}", policy.init,
                   jax.jit(act) if policy.jittable else act,
-                  policy.refresh, jittable=policy.jittable)
+                  policy.refresh, jittable=policy.jittable,
+                  with_users=policy.with_users)
 
 
 # ------------------------------------------------------------------ qtable
@@ -134,8 +157,7 @@ def heuristic_greedy_policy(spec) -> Policy:
     Params carry the scenario constants (``constraint``, ``n_users``) and
     are re-derived by ``refresh`` at round boundaries."""
     n_max = _require_base_first(spec)
-    acc_menu = jnp.asarray(np.concatenate(
-        [lm.ACCURACY, [lm.ACCURACY[0], lm.ACCURACY[0]]]), jnp.float32)
+    acc_menu = _ACC_MENU
     t_local = jnp.asarray(lm.T_LOCAL, jnp.float32)
     base = 4 * n_max
 
@@ -144,7 +166,7 @@ def heuristic_greedy_policy(spec) -> Policy:
         n = params["n_users"].astype(jnp.float32)
         constraint = params["constraint"].astype(jnp.float32)
         cell = jnp.arange(obs.shape[0])
-        u = jnp.argmax(obs[:, :n_max], -1)
+        u, committed, remaining = _round_progress(obs, n_max, n)
         busy_p = obs[cell, n_max + u] > 0.5
         busy_m = obs[cell, 2 * n_max + u] > 0.5
         k_edge = obs[:, base] * OCC_LEVELS
@@ -152,8 +174,6 @@ def heuristic_greedy_policy(spec) -> Policy:
         weak_e = obs[:, base + 2] > 0.5
         k_cloud = obs[:, base + 3] * OCC_LEVELS
         busy_m_c = obs[:, base + 4] > 0.5
-        committed = obs[:, base + 6] * ACC_NORM * n
-        remaining = jnp.maximum(1.0, n - u)
         need = (constraint * n - committed) / remaining
 
         # per-action latency estimate for THIS user (the weak-link penalty
@@ -190,7 +210,11 @@ def heuristic_greedy_policy(spec) -> Policy:
                 "n_users": jnp.asarray(scenario.n_users)
                 .astype(jnp.float32)}
 
-    return Policy("greedy", init, act, refresh)
+    def with_users(params, n_users):
+        return dict(params, n_users=jnp.asarray(n_users)
+                    .astype(jnp.float32))
+
+    return Policy("greedy", init, act, refresh, with_users=with_users)
 
 
 # ------------------------------------------------------------------ oracle
@@ -256,4 +280,88 @@ def oracle_policy(spec) -> Policy:
         return dict(params, n_users=jnp.asarray(scenario.n_users)
                     .astype(jnp.int32))
 
-    return Policy("oracle", init, act, refresh)
+    def with_users(params, n_users):
+        return dict(params, n_users=jnp.asarray(n_users)
+                    .astype(jnp.int32))
+
+    return Policy("oracle", init, act, refresh, with_users=with_users)
+
+
+# ----------------------------------------------------------------- guarded
+def slo_guarded_params(inner_params, fallback_params) -> dict:
+    """Params for a :func:`slo_guarded` policy wrapping already-trained
+    inner params (e.g. a loaded PolicyBundle's); the scenario-borne fields
+    are empty until ``refresh`` (or ``with_users``) binds them."""
+    return {"inner": inner_params, "fallback": fallback_params,
+            "constraint": jnp.zeros((0,), jnp.float32),
+            "n_users": jnp.zeros((0,), jnp.float32)}
+
+
+def slo_guarded(policy: Policy, spec, fallback: Policy | None = None
+                ) -> Policy:
+    """Feasibility guard: serve the wrapped policy's pick unless it is
+    *predicted to violate* — i.e. after committing its accuracy, even
+    all-remaining-users-at-max-accuracy cannot reach the round's
+    constraint — in which case the fallback (default: the
+    feasibility-preserving :func:`heuristic_greedy_policy`) serves the
+    request instead.
+
+    The prediction is exact under the env's accuracy accounting: accuracy
+    is a per-round mean over fixed per-action values, so "the best
+    reachable final accuracy still fails" is a one-step lookahead, not a
+    heuristic.  A guarded policy therefore inherits the greedy baseline's
+    never-violates-a-satisfiable-constraint property while keeping the
+    wrapped policy's latency behavior on every pick the guard accepts
+    (``serve_fleet --guard`` wires this around any served bundle).
+
+    Params are ``{"inner", "fallback", "constraint", "n_users"}`` — build
+    with :func:`slo_guarded_params`; ``refresh``/``with_users`` rebind the
+    scenario-borne fields of the wrapper *and* of both wrapped policies.
+    """
+    fallback = heuristic_greedy_policy(spec) if fallback is None else fallback
+    n_max = _require_base_first(spec)
+    acc_max = float(lm.ACCURACY.max())
+
+    def act(params, obs, key):
+        k_in, k_fb = jax.random.split(key)
+        a_in = jnp.asarray(policy.act(params["inner"], obs, k_in))
+        a_fb = jnp.asarray(fallback.act(params["fallback"], obs, k_fb))
+        n = params["n_users"].astype(jnp.float32)
+        constraint = params["constraint"].astype(jnp.float32)
+        _, committed, remaining = _round_progress(obs, n_max, n)
+        # best reachable round accuracy sum if we commit a_in now and
+        # every later user picks the most accurate tier
+        best = committed + _ACC_MENU[a_in] + (remaining - 1.0) * acc_max
+        ok = best + ACC_TOL >= constraint * n
+        return jnp.where(ok, a_in, a_fb).astype(jnp.int32)
+
+    def init(key):
+        k_in, k_fb = jax.random.split(key)
+        return slo_guarded_params(policy.init(k_in), fallback.init(k_fb))
+
+    def refresh(params, scenario):
+        inner = params["inner"]
+        if policy.refresh is not None:
+            inner = policy.refresh(inner, scenario)
+        fb = params["fallback"]
+        if fallback.refresh is not None:
+            fb = fallback.refresh(fb, scenario)
+        return {"inner": inner, "fallback": fb,
+                "constraint": jnp.asarray(scenario.constraint, jnp.float32),
+                "n_users": jnp.asarray(scenario.n_users)
+                .astype(jnp.float32)}
+
+    def with_users(params, n_users):
+        inner = params["inner"]
+        if policy.with_users is not None:
+            inner = policy.with_users(inner, n_users)
+        fb = params["fallback"]
+        if fallback.with_users is not None:
+            fb = fallback.with_users(fb, n_users)
+        return dict(params, inner=inner, fallback=fb,
+                    n_users=jnp.asarray(n_users).astype(jnp.float32))
+
+    jittable = policy.jittable and fallback.jittable
+    return Policy(f"guarded-{policy.kind}", init,
+                  jax.jit(act) if jittable else act, refresh,
+                  jittable=jittable, with_users=with_users)

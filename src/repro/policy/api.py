@@ -49,12 +49,19 @@ class Policy(NamedTuple):
     host-side adapters (the tabular Q dict) set it False, and jitted
     harnesses (the fleet gateway) must reject them up front instead of
     crashing mid-trace.
+    ``with_users(params, n_users) -> params`` (optional) is the *traceable*
+    little sibling of ``refresh``: it re-binds only the per-cell round
+    sizes into params, so request-level serving — where every cell's
+    round size is a device array that changes mid-scan as queues drain —
+    can rebind inside jit without a host round-trip.  ``None`` means the
+    policy does not condition on round sizes (e.g. network weights).
     """
     kind: str
     init: Callable[[Any], Any]
     act: Callable[[Any, Any, Any], Any]
     refresh: Optional[Callable[[Any, Any], Any]] = None
     jittable: bool = True
+    with_users: Optional[Callable[[Any, Any], Any]] = None
 
 
 _DEFAULT_KEY = jax.random.PRNGKey(0)
@@ -79,3 +86,31 @@ def refresh_params(policy: Policy, params, scenario):
     if policy.refresh is None:
         return params
     return policy.refresh(params, scenario)
+
+
+def require_jittable(policy: Policy, harness: str) -> None:
+    """Reject a host-side adapter up front — jitted serving harnesses
+    call this before tracing so the failure is a clear pointer to the
+    single-cell harnesses instead of a mid-trace crash."""
+    if not policy.jittable:
+        raise ValueError(
+            f"{harness} jit-compiles Policy.act, but the "
+            f"{policy.kind!r} adapter is host-side (jittable=False); "
+            f"drive it through the single-cell harnesses "
+            f"(EdgeCloudEnv.rollout_greedy / IntelligentOrchestrator) "
+            f"instead")
+
+
+def act_batch(policy: Policy, params, obs, key, n_users=None):
+    """Ragged-batch decision step: one ``policy.act`` over all C cells,
+    with per-cell round sizes rebound first when the policy conditions on
+    them (``with_users``).  Harnesses whose round sizes vary per cell —
+    the request-level serving engine, where each cell's in-flight round is
+    however many requests its queue held — call through here; for
+    round-size-independent policies this is exactly ``policy.act``.
+
+    Traceable whenever the policy is: the rebinding is pure pytree
+    surgery, so jitted scans call this every tick."""
+    if n_users is not None and policy.with_users is not None:
+        params = policy.with_users(params, n_users)
+    return policy.act(params, obs, key)

@@ -1,0 +1,31 @@
+"""Event-driven request-level serving — the unit of work is a request.
+
+    stream    RequestStream continuous-time traces (per-request arrival
+              timestamp, cell, SLO budget) with no [1, n_max] clipping:
+              bursts queue, idle cells idle
+    engine    jitted event loop over fixed-capacity device request
+              queues; micro-batches all pending decisions across cells
+              per tick through one Policy.act, tracks per-request
+              queueing + service latency against each deadline, and
+              hot-swaps scenario-borne params at stream epoch boundaries
+    metrics   per-request accounting: p50/p95/p99 end-to-end latency,
+              SLO attainment, drop/defer counts
+    compat    the demoted round-synchronous replay gateway
+              (``replay_trace``), parity-tested against the engine in
+              degenerate round mode
+"""
+from repro.serve.stream import (RequestStream, poisson_request_stream,
+                                round_synchronous_stream)
+from repro.serve.engine import (EngineState, RequestRecords, ServeConfig,
+                                ServeEngine, make_serve_engine,
+                                serve_stream)
+from repro.serve.metrics import request_report
+from repro.serve.compat import make_gateway, replay_trace
+
+__all__ = [
+    "RequestStream", "poisson_request_stream", "round_synchronous_stream",
+    "EngineState", "RequestRecords", "ServeConfig", "ServeEngine",
+    "make_serve_engine", "serve_stream",
+    "request_report",
+    "make_gateway", "replay_trace",
+]

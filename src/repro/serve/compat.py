@@ -1,0 +1,128 @@
+"""Round-synchronous compat layer — the old trace-replay gateway, demoted.
+
+``replay_trace`` serves a (T, C) ``poisson_round_trace`` row-by-row with
+round-mean metrics against the solver oracle.  It predates the
+request-level engine and keeps two distortions the engine doesn't have:
+burst mass beyond ``n_max`` is clipped away and idle cells are padded
+with a phantom request (pass ``trace_stats`` from
+``poisson_round_trace(..., with_stats=True)`` to label the report
+honestly), and latency is only accounted as a per-round mean, never per
+request.
+
+It remains because (a) existing benchmarks/CI compare round-level
+figures, and (b) it is the reference the engine is parity-tested
+against: on a ``round_synchronous_stream`` of the same trace
+(``repro.serve.stream``) the request-level engine must reproduce this
+module's request-weighted ART and violation rate to 1e-5
+(``tests/test_serve.py``).  New serving code should use
+``repro.serve.engine.serve_stream``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.env.edge_cloud import REWARD_SCALE
+from repro.fleet.env import FleetConfig, make_fleet_env
+from repro.fleet.evaluate import run_policy_round
+from repro.fleet.workload import FleetScenario
+from repro.hltrain.metrics import reward_from_round
+from repro.policy.api import Policy, refresh_params, require_jittable
+from repro.policy.adapters import solve_oracle
+
+
+def make_gateway(policy: Policy, cfg: FleetConfig):
+    """Jitted one-round server: ``serve_round(params, scenario, state,
+    key) -> (state', info)`` aborts in-flight rounds (the trace swapped
+    ``n_users``), then scans ``n_max`` fleet-wide decisions through
+    ``policy.act``; ``info`` holds each cell's *first* completed round
+    (art/acc/violated, (C,))."""
+    require_jittable(policy, "the fleet gateway")
+    env = make_fleet_env(cfg)
+
+    @jax.jit
+    def serve_round(params, scenario: FleetScenario, state, key):
+        return run_policy_round(env, policy, cfg, params, scenario,
+                                env.reset_rounds(state), key)
+
+    return env, serve_round
+
+
+def replay_trace(policy: Policy, params, scenario: FleetScenario,
+                 trace, cfg: FleetConfig, *, key=None,
+                 oracle: dict | None = None,
+                 trace_stats: dict | None = None) -> dict:
+    """Open-loop replay of a (T, C) per-round arrival trace.  Returns
+    ``{"rounds": [per-round dicts], **summary}``; pass precomputed
+    ``solve_oracle(scenario)`` tables to skip re-solving, and the trace's
+    ``with_stats`` dict as ``trace_stats`` to label how much burst mass
+    the round abstraction clipped."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    if oracle is None:
+        oracle = solve_oracle(scenario)
+    opt_art_table = np.asarray(oracle["art"])     # (C, n_max)
+    constraint = np.asarray(scenario.constraint)
+    cells = np.arange(scenario.n_cells)
+    trace = np.asarray(trace)
+
+    env, serve_round = make_gateway(policy, cfg)
+    k_env, key = jax.random.split(key)
+    state = env.init(k_env, scenario)
+
+    rounds = []
+    decisions = 0
+    wall_serving = 0.0
+    for t in range(trace.shape[0]):
+        n_t = trace[t]
+        scn_t = scenario._replace(n_users=jnp.asarray(n_t))
+        params_t = refresh_params(policy, params, scn_t)
+        key, k_round = jax.random.split(key)
+        t0 = time.perf_counter()
+        state, info = jax.block_until_ready(
+            serve_round(params_t, scn_t, state, k_round))
+        dt = time.perf_counter() - t0
+        if t > 0:          # round 0 pays the XLA compile; keep it out of
+            wall_serving += dt  # the steady-state throughput figure
+            decisions += scenario.n_cells * cfg.n_max
+        art = np.asarray(info["art"])
+        acc = np.asarray(info["acc"])
+        violated = np.asarray(info["violated"])
+        served = int(n_t.sum())
+        opt_art = opt_art_table[cells, n_t - 1]
+        reward = reward_from_round(art, acc, constraint)
+        # latency AND violation exposure are request-weighted: a cell
+        # serving 5 requests in a violating round counts 5× a singleton
+        rounds.append({
+            "round": t, "served_requests": served,
+            "mean_art_ms": float((art * n_t).sum() / served),
+            "opt_art_ms": float((opt_art * n_t).sum() / served),
+            "violation_rate": float((violated * n_t).sum() / served),
+            "mean_reward": float(reward.mean()),   # per cell-round
+            "opt_reward": float((-opt_art / REWARD_SCALE).mean()),
+        })
+
+    served_total = int(trace.sum())
+    wmean = lambda k: float(sum(r[k] * r["served_requests"]
+                                for r in rounds) / served_total)
+    mean = lambda k: float(np.mean([r[k] for r in rounds]))
+    report = {
+        "rounds": rounds,
+        "n_rounds": len(rounds),
+        "n_cells": scenario.n_cells,
+        "served_requests": served_total,
+        "mean_art_ms": wmean("mean_art_ms"),
+        "opt_art_ms": wmean("opt_art_ms"),
+        "violation_rate": wmean("violation_rate"),
+        "mean_reward": mean("mean_reward"),
+        "opt_reward": mean("opt_reward"),
+        # None (JSON null) when there is no steady-state window — a
+        # 1-round trace only has the compile-bearing round 0
+        "decisions_per_s": (decisions / wall_serving
+                            if decisions and wall_serving > 0 else None),
+    }
+    if trace_stats is not None:
+        report["trace_stats"] = dict(trace_stats)
+    return report

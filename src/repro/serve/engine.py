@@ -1,0 +1,337 @@
+"""Event-driven request-level serving engine.
+
+The unit of work is a *request*, not a round.  The engine advances in
+decision ticks of ``tick_ms`` wall clock; per tick, inside one jitted
+``lax.scan`` body, it
+
+    1. admits newly-arrived requests into fixed-capacity per-cell device
+       queues (overflow = counted drop, never a silent clip),
+    2. forms a round at every idle cell with backlog — the round size is
+       ``min(queue_len, n_max)``, so a burst of 3·n_max requests drains
+       as three consecutive rounds and an empty cell simply idles,
+    3. micro-batches ALL pending decisions *across cells* through one
+       ``Policy.act`` call (``act_batch`` rebinds each cell's current
+       round size for round-size-conditioned policies), steps the fleet
+       env once, and
+    4. on round completion scatters per-request records — queueing wait,
+       service latency, the round's ART and accuracy-violation flag —
+       into preallocated device arrays indexed by request id.
+
+Cells are therefore mid-round *asynchronously*: one cell can be on
+decision 3 of a 7-request round while its neighbor starts a fresh
+2-request round and a third sits idle, yet every tick issues exactly one
+fleet-wide ``Policy.act`` — the accelerator sees the same batched
+decision shape as the round-synchronous evaluator.
+
+The host driver ``serve_stream`` chunks the tick scan at the stream's
+epoch boundaries and refreshes scenario-borne policy params between
+chunks (``on_epoch`` is the bundle hot-swap point), then reduces the
+per-request records with ``repro.serve.metrics``.
+
+Run on a ``round_synchronous_stream`` (all arrivals on round boundaries,
+counts ≤ n_max), the engine degenerates to exactly the round-replay
+gateway's behavior — the parity tests enforce ART/violation agreement
+with ``replay_trace`` at 1e-5.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fleet.env import FleetConfig, FleetState, make_fleet_env
+from repro.fleet.workload import FleetScenario
+from repro.policy.api import (Policy, act_batch, refresh_params,
+                              require_jittable)
+from repro.serve.metrics import request_report
+from repro.serve.stream import RequestStream
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Engine configuration.  ``tick_ms`` is the wall-clock width of one
+    decision tick; a full ``n_max``-request round spans ``round_ms =
+    n_max * tick_ms``, which keeps queueing delays commensurate with the
+    latency model's service times (hundreds of ms) and with the 150–800 ms
+    SLO target pool.  ``queue_cap`` bounds each cell's backlog; arrivals
+    beyond it are dropped and counted."""
+    n_max: int = 5
+    obs_spec: str = "base"
+    tick_ms: float = 50.0
+    queue_cap: int = 64
+    quiet: bool = False
+    shared_cloud: bool = False
+    shared_edge: bool = False
+
+    @property
+    def round_ms(self) -> float:
+        return self.n_max * self.tick_ms
+
+    def fleet(self) -> FleetConfig:
+        return FleetConfig(n_max=self.n_max, obs_spec=self.obs_spec,
+                           quiet=self.quiet,
+                           shared_cloud=self.shared_cloud,
+                           shared_edge=self.shared_edge)
+
+
+class RequestRecords(NamedTuple):
+    """Per-request outcome arrays, length N+1 — slot N is the scatter
+    scratch for padded lanes and is sliced off before reporting."""
+    wait_ms: jnp.ndarray     # queueing delay: round start − arrival
+    service_ms: jnp.ndarray  # response time of this request's slot
+    art_ms: jnp.ndarray      # its round's ART (round-replay-compatible)
+    served: jnp.ndarray      # bool — round completed within the horizon
+    dropped: jnp.ndarray     # bool — rejected on queue overflow
+    violated: jnp.ndarray    # bool — its round violated the accuracy SLO
+
+
+class EngineState(NamedTuple):
+    env: FleetState
+    key: jnp.ndarray
+    q_ids: jnp.ndarray        # (C, Q) int32 — queued request ids (ring)
+    q_head: jnp.ndarray       # (C,) int32
+    q_len: jnp.ndarray        # (C,) int32
+    cur_n: jnp.ndarray        # (C,) int32 — in-flight round size, 0 = idle
+    cur_ids: jnp.ndarray      # (C, n_max) int32 — ids in the round's slots
+    round_start: jnp.ndarray  # (C,) float32
+    rec: RequestRecords
+
+
+class ServeEngine(NamedTuple):
+    """``init(key, scenario, n_requests)`` and the jitted
+    ``run_epoch(params, scenario, state, tick_ids, tick_now, stream_t,
+    stream_cell) -> (state', n_decisions)``."""
+    init: Callable
+    run_epoch: Callable
+    cfg: ServeConfig
+
+
+def make_serve_engine(policy: Policy, cfg: ServeConfig) -> ServeEngine:
+    require_jittable(policy, "the request-level serving engine")
+    env = make_fleet_env(cfg.fleet())
+    n_max, Q = cfg.n_max, cfg.queue_cap
+    slot = jnp.arange(n_max)
+
+    def init(key, scenario: FleetScenario, n_requests: int) -> EngineState:
+        C = scenario.n_cells
+        k_env, key = jax.random.split(key)
+        zf = jnp.zeros((n_requests + 1,), jnp.float32)
+        zb = jnp.zeros((n_requests + 1,), bool)
+        return EngineState(
+            env=env.init(k_env, scenario),
+            key=key,
+            q_ids=jnp.full((C, Q), -1, jnp.int32),
+            q_head=jnp.zeros((C,), jnp.int32),
+            q_len=jnp.zeros((C,), jnp.int32),
+            cur_n=jnp.zeros((C,), jnp.int32),
+            cur_ids=jnp.full((C, n_max), -1, jnp.int32),
+            round_start=jnp.zeros((C,), jnp.float32),
+            rec=RequestRecords(zf, zf, zf, zb, zb, zb))
+
+    def run_epoch(params, scenario: FleetScenario, state: EngineState,
+                  tick_ids, tick_now, tick_live, stream_t, stream_cell):
+        """One epoch = a jitted scan over its ticks.  ``tick_ids`` is
+        (T_e, A) int32 — the ids arriving at each tick, -1-padded to the
+        trace's max per-tick burst; ``tick_now`` (T_e,) float32 is each
+        tick's wall-clock time; ``tick_live`` (T_e,) bool marks real
+        serving ticks — epoch-padding ticks are inert (``lax.cond``
+        skips them entirely) so the serving window is a function of the
+        stream horizon alone, never of the epoch split.
+        ``stream_t``/``stream_cell`` are the (N+1,)-padded per-request
+        arrays.  Returns the advanced state and the number of real
+        (non-idle) request decisions issued."""
+        scratch = stream_t.shape[0] - 1  # slot N: padded-lane scatter sink
+
+        def live_tick(st, ids, now):
+
+            # -- 1. admit this tick's arrivals into the per-cell rings --
+            def admit(i, acc):
+                q_ids, q_len, dropped = acc
+                rid = ids[i]
+                valid = rid >= 0
+                c = jnp.where(valid, stream_cell[jnp.maximum(rid, 0)], 0)
+                room = q_len[c] < Q
+                ok = valid & room
+                pos = (st.q_head[c] + q_len[c]) % Q
+                q_ids = q_ids.at[c, pos].set(
+                    jnp.where(ok, rid, q_ids[c, pos]))
+                q_len = q_len.at[c].add(ok.astype(jnp.int32))
+                dropped = dropped.at[
+                    jnp.where(valid & ~room, rid, scratch)].set(True)
+                return q_ids, q_len, dropped
+
+            q_ids, q_len, dropped = jax.lax.fori_loop(
+                0, ids.shape[0], admit,
+                (st.q_ids, st.q_len, st.rec.dropped))
+
+            # -- 2. form rounds at idle cells with backlog --
+            start = (st.cur_n == 0) & (q_len > 0)
+            n_new = jnp.where(start, jnp.minimum(q_len, n_max), 0)
+            pos = (st.q_head[:, None] + slot[None, :]) % Q
+            cand = jnp.take_along_axis(q_ids, pos, axis=1)
+            taken = slot[None, :] < n_new[:, None]
+            cur_ids = jnp.where(start[:, None],
+                                jnp.where(taken, cand, -1), st.cur_ids)
+            q_head = (st.q_head + n_new) % Q
+            q_len = q_len - n_new
+            cur_n = jnp.where(start, n_new, st.cur_n)
+            round_start = jnp.where(start, now, st.round_start)
+
+            # -- 3. one fleet-wide micro-batched decision + env step --
+            active = cur_n > 0
+            n_eff = jnp.maximum(cur_n, 1)
+            scn_t = scenario._replace(n_users=n_eff)
+            obs = env.observe(scn_t, st.env)
+            key, k_act = jax.random.split(st.key)
+            a = act_batch(policy, params, obs, k_act, n_users=n_eff)
+            # idle cells run a phantom 1-user round pinned to d0-local so
+            # they add no edge/cloud occupancy under shared couplings;
+            # their results are masked out of every record below
+            a = jnp.where(active, a, 0)
+            env2, _, _, done, info = env.step(scn_t, st.env, a)
+
+            # -- 4. scatter per-request records for completed rounds --
+            fin = done & active
+            rec_mask = fin[:, None] & (slot[None, :] < cur_n[:, None])
+            rid = jnp.where(rec_mask, cur_ids, scratch)
+            flat = rid.reshape(-1)
+            rec = st.rec._replace(dropped=dropped)
+            rec = rec._replace(
+                wait_ms=rec.wait_ms.at[flat].set(
+                    (round_start[:, None] - stream_t[rid]).reshape(-1)),
+                service_ms=rec.service_ms.at[flat].set(
+                    info["times"].reshape(-1)),
+                art_ms=rec.art_ms.at[flat].set(
+                    jnp.broadcast_to(info["art"][:, None],
+                                     rid.shape).reshape(-1)),
+                served=rec.served.at[flat].set(True),
+                violated=rec.violated.at[flat].set(
+                    jnp.broadcast_to(info["violated"][:, None],
+                                     rid.shape).reshape(-1)))
+
+            st2 = EngineState(
+                env=env2, key=key, q_ids=q_ids, q_head=q_head,
+                q_len=q_len, cur_n=jnp.where(fin, 0, cur_n),
+                cur_ids=cur_ids, round_start=round_start, rec=rec)
+            return st2, active.sum().astype(jnp.int32)
+
+        def tick(st, xs):
+            ids, now, live = xs
+            return jax.lax.cond(
+                live,
+                lambda s: live_tick(s, ids, now),
+                lambda s: (s, jnp.int32(0)),
+                st)
+
+        state, n_act = jax.lax.scan(
+            tick, state, (tick_ids, tick_now, tick_live))
+        return state, n_act.sum()
+
+    return ServeEngine(init=init, run_epoch=jax.jit(run_epoch), cfg=cfg)
+
+
+def _tick_buckets(stream: RequestStream, tick_ms: float,
+                  ticks_per_epoch: int):
+    """Host-side admission schedule: bucket request ids by the first tick
+    whose wall clock reaches their arrival time.  Returns (T, A) -1-padded
+    id rows, the (T,) tick times, the (T,) live-tick mask, and the epoch
+    count.
+
+    The serving window is a function of the horizon alone: the
+    ``n_ticks = ceil(horizon/tick) + 1`` live ticks cover every arrival
+    strictly before ``horizon_ms`` (the +1 reaches the last partial
+    interval).  T is then padded up to a whole number of epochs — one
+    compiled epoch shape — but pad ticks are marked dead in the live
+    mask and the engine skips them, so served/deferred/SLO accounting
+    cannot shift with the epoch split; requests admitted but unfinished
+    at tick ``n_ticks`` are deferred regardless of padding."""
+    n_ticks = max(1, int(np.ceil(stream.horizon_ms / tick_ms))) + 1
+    n_epochs = -(-n_ticks // ticks_per_epoch)
+    T = n_epochs * ticks_per_epoch
+    tick_of = np.ceil(np.asarray(stream.t_ms, np.float64)
+                      / tick_ms).astype(np.int64)
+    ok = tick_of < n_ticks
+    counts = np.bincount(tick_of[ok], minlength=T)
+    A = max(1, int(counts.max()) if counts.size else 1)
+    ids = np.full((T, A), -1, np.int32)
+    cursor = np.zeros(T, np.int64)
+    for i in np.nonzero(ok)[0]:
+        t = tick_of[i]
+        ids[t, cursor[t]] = i
+        cursor[t] += 1
+    now = (np.arange(T, dtype=np.float64) * tick_ms).astype(np.float32)
+    live = np.arange(T) < n_ticks
+    return ids, now, live, n_epochs
+
+
+def serve_stream(policy: Policy, params, scenario: FleetScenario,
+                 stream: RequestStream, cfg: ServeConfig, *, key=None,
+                 on_epoch: Optional[Callable] = None,
+                 verbose: bool = False) -> dict:
+    """Serve a :class:`RequestStream` end to end.  Returns the per-request
+    report of ``repro.serve.metrics.request_report`` plus engine timing
+    (steady-state = excluding the compile-bearing first epoch):
+    ``decisions_per_s`` counts every lane decided through ``Policy.act``
+    — C per tick, phantom idle lanes included, the same accounting the
+    round-replay gateway uses (C · n_max per round) so the two figures
+    compare overhead apples-to-apples — and ``active_decisions_per_s``
+    counts only decisions for real in-flight requests.  Under
+    ``"records"``: the raw per-request numpy arrays.
+
+    ``on_epoch(epoch_idx, params) -> params`` runs at every stream epoch
+    boundary (default: re-derive scenario-borne params via
+    ``Policy.refresh``) — this is where a caller hot-swaps a freshly
+    trained PolicyBundle's params into live serving."""
+    if scenario.n_cells != stream.n_cells:
+        raise ValueError(f"stream built for {stream.n_cells} cells, "
+                         f"scenario has {scenario.n_cells}")
+    key = jax.random.PRNGKey(0) if key is None else key
+    engine = make_serve_engine(policy, cfg)
+    ticks_per_epoch = max(1, int(round(stream.epoch_ms / cfg.tick_ms)))
+    ids, now, live, n_epochs = _tick_buckets(stream, cfg.tick_ms,
+                                             ticks_per_epoch)
+    N = stream.n_requests
+    stream_t = jnp.asarray(np.append(stream.t_ms, 0.0), jnp.float32)
+    stream_cell = jnp.asarray(np.append(stream.cell, 0), jnp.int32)
+
+    k_init, key = jax.random.split(key)
+    state = engine.init(k_init, scenario, N)
+    params_t = params
+    wall, lanes, active = 0.0, 0, 0
+    for e in range(n_epochs):
+        params_t = (refresh_params(policy, params, scenario)
+                    if on_epoch is None else on_epoch(e, params_t))
+        lo, hi = e * ticks_per_epoch, (e + 1) * ticks_per_epoch
+        t0 = time.perf_counter()
+        state, n_act = jax.block_until_ready(engine.run_epoch(
+            params_t, scenario, state, jnp.asarray(ids[lo:hi]),
+            jnp.asarray(now[lo:hi]), jnp.asarray(live[lo:hi]),
+            stream_t, stream_cell))
+        dt = time.perf_counter() - t0
+        if e > 0:  # epoch 0 pays the XLA compile
+            wall += dt
+            lanes += scenario.n_cells * int(live[lo:hi].sum())
+            active += int(n_act)
+        if verbose:
+            done = int(np.asarray(state.rec.served)[:N].sum())
+            print(f"  epoch {e:3d}: ticks [{lo}, {hi}), "
+                  f"{done:6d}/{N} requests served, "
+                  f"backlog {int(np.asarray(state.q_len).sum())}")
+
+    records = {k: np.asarray(v)[:N] for k, v in
+               state.rec._asdict().items()}
+    report = request_report(stream, records)
+    report["n_epochs"] = n_epochs
+    report["n_ticks"] = int(live.sum())
+    report["tick_ms"] = cfg.tick_ms
+    # None when there is no steady-state window (single epoch)
+    report["decisions_per_s"] = (lanes / wall
+                                 if lanes and wall > 0 else None)
+    report["active_decisions_per_s"] = (active / wall
+                                        if active and wall > 0 else None)
+    report["records"] = records
+    return report

@@ -1,0 +1,147 @@
+"""Continuous-time request streams — the workload unit of ``repro.serve``.
+
+The round abstraction (``fleet.workload.poisson_round_trace``) forces
+every cell to serve between 1 and ``n_max`` requests per synchronized
+round: bursts beyond ``n_max`` are silently discarded and idle cells are
+padded with a phantom request.  A :class:`RequestStream` drops both
+distortions — it is a flat, arrival-time-sorted sequence of individual
+requests (timestamp, cell, SLO budget) with *no* clipping: a burst of
+3·n_max requests simply queues at its cell, and a cell whose Poisson
+process draws nothing stays idle.
+
+Two generators:
+
+    poisson_request_stream    per-cell homogeneous Poisson processes in
+                              continuous time (heterogeneous rates OK) —
+                              the native request-level workload
+    round_synchronous_stream  a (T, C) round trace re-expressed as a
+                              stream: all arrivals land exactly on round
+                              boundaries with deadline = the round
+                              horizon.  This is the degenerate mode the
+                              round↔request parity test serves through —
+                              the engine must reproduce ``replay_trace``
+                              on it.
+
+Streams are host-side numpy (generation is not a hot path); the engine
+ships them to the device once per run.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import numpy as np
+
+from repro.fleet.workload import FleetScenario
+
+
+class RequestStream(NamedTuple):
+    """Arrival-time-sorted per-request arrays (length N = total requests).
+
+    ``slo_ms`` is the *relative* latency budget: request i meets its SLO
+    iff its end-to-end latency (queueing wait + service) is at most
+    ``slo_ms[i]``; the absolute deadline is ``t_ms[i] + slo_ms[i]``.
+    ``horizon_ms`` bounds the serving window (the engine runs exactly one
+    tick past it to cover the last partial tick interval; requests still
+    unfinished then are reported as deferred), and ``epoch_ms`` marks
+    the scenario-refresh / bundle-hot-swap boundaries of the engine's
+    outer loop — an orchestration knob that cannot change any serving
+    outcome."""
+    t_ms: np.ndarray       # (N,) float32 — arrival timestamps, ascending
+    cell: np.ndarray       # (N,) int32   — destination cell
+    slo_ms: np.ndarray     # (N,) float32 — relative deadline budget
+    horizon_ms: float
+    epoch_ms: float
+    n_cells: int
+
+    @property
+    def n_requests(self) -> int:
+        return int(self.t_ms.shape[0])
+
+    def per_cell_counts(self) -> np.ndarray:
+        return np.bincount(self.cell, minlength=self.n_cells)
+
+
+def _sorted_stream(t, cell, slo, horizon_ms, epoch_ms, n_cells
+                   ) -> RequestStream:
+    order = np.argsort(t, kind="stable")
+    return RequestStream(np.asarray(t, np.float32)[order],
+                         np.asarray(cell, np.int32)[order],
+                         np.asarray(slo, np.float32)[order],
+                         float(horizon_ms), float(epoch_ms), int(n_cells))
+
+
+def poisson_request_stream(key, scenario: FleetScenario,
+                           horizon_ms: float, *,
+                           rate: float | np.ndarray = 3.0,
+                           round_ms: float = 250.0,
+                           slo_ms: float | np.ndarray | None = None,
+                           epoch_ms: float | None = None) -> RequestStream:
+    """Per-cell homogeneous Poisson processes over ``[0, horizon_ms)``.
+
+    ``rate`` keeps the round-trace unit — mean arrivals per cell per
+    ``round_ms`` of wall clock — so ``rate=3.0`` here and in
+    ``poisson_round_trace`` describe the same offered load; a per-cell
+    ``(C,)`` array gives heterogeneous traffic.  Counts are exact Poisson
+    (no ``[1, n_max]`` clipping) and arrival times are i.i.d. uniform
+    given the count — the standard conditional construction of a Poisson
+    process.
+
+    Each request's SLO budget defaults to its cell's
+    ``scenario.latency_targets()`` — the same (L, A) latency target the
+    ``constraint`` observation block conditions policies on, so the SLO
+    the serving layer enforces is the one the policy was trained to
+    respect.  ``epoch_ms`` defaults to the whole horizon (one epoch).
+    """
+    n_cells = scenario.n_cells
+    lam = np.broadcast_to(np.asarray(rate, np.float64), (n_cells,))
+    mean_counts = lam * (float(horizon_ms) / float(round_ms))
+    k_count, k_time = jax.random.split(key)
+    counts = np.asarray(jax.random.poisson(
+        k_count, np.asarray(mean_counts), (n_cells,)), np.int64)
+    total = int(counts.sum())
+    cell = np.repeat(np.arange(n_cells, dtype=np.int32), counts)
+    t = np.asarray(jax.random.uniform(
+        k_time, (total,), minval=0.0, maxval=float(horizon_ms)))
+    if slo_ms is None:
+        slo = np.asarray(scenario.latency_targets(), np.float32)[cell]
+    else:
+        slo = np.broadcast_to(np.asarray(slo_ms, np.float32),
+                              (n_cells,))[cell]
+    return _sorted_stream(t, cell, slo,
+                          horizon_ms,
+                          horizon_ms if epoch_ms is None else epoch_ms,
+                          n_cells)
+
+
+def round_synchronous_stream(trace, round_ms: float, *,
+                             slo_ms: float | np.ndarray | None = None,
+                             epoch_ms: float | None = None
+                             ) -> RequestStream:
+    """A (T, C) per-round arrival-count trace as a degenerate stream: the
+    ``trace[t, c]`` requests of round ``t`` all arrive exactly at the
+    round boundary ``t * round_ms`` and carry ``slo_ms = round_ms`` (the
+    round horizon) unless overridden.  Because counts from
+    ``poisson_round_trace`` are already in ``[1, n_max]``, every round
+    drains within its own window and the request-level engine degenerates
+    to round-synchronous serving — the parity tests compare it against
+    ``replay_trace`` on exactly this stream."""
+    trace = np.asarray(trace)
+    horizon, n_cells = trace.shape
+    t, cell = [], []
+    for r in range(horizon):
+        for c in range(n_cells):
+            k = int(trace[r, c])
+            t.extend([r * float(round_ms)] * k)
+            cell.extend([c] * k)
+    t = np.asarray(t, np.float32)
+    cell = np.asarray(cell, np.int32)
+    if slo_ms is None:
+        slo = np.full(t.shape, float(round_ms), np.float32)
+    else:
+        slo = np.broadcast_to(np.asarray(slo_ms, np.float32),
+                              (n_cells,))[cell]
+    horizon_ms = horizon * float(round_ms)
+    return _sorted_stream(t, cell, slo, horizon_ms,
+                          horizon_ms if epoch_ms is None else epoch_ms,
+                          n_cells)

@@ -1,0 +1,326 @@
+"""Request-level serving: streams, engine, metrics, round↔request parity.
+
+Acceptance contract of the serving-API redesign:
+  * round↔request parity — the engine, fed a round-synchronous stream
+    (all arrivals on round boundaries, deadlines = the round horizon),
+    reproduces ``replay_trace``'s request-weighted ART and violation
+    rate to 1e-5 on a fixed seed, for the greedy baseline AND a
+    (violating) untrained DQN
+  * no served request's recorded latency precedes its arrival
+    (hypothesis property over random streams)
+  * bursts queue instead of clipping, idle cells idle, queue overflow
+    drops are counted, the ``slo_guarded`` combinator inherits the
+    greedy baseline's zero-accuracy-violation property
+  * streams: heterogeneous Poisson rates, honest round-trace clip stats
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fleet import FleetConfig, random_fleet
+from repro.fleet.workload import poisson_round_trace
+from repro.launch.serve_fleet import replay_trace
+from repro.policy import (Policy, dqn_policy, heuristic_greedy_policy,
+                          qtable_policy, slo_guarded, slo_guarded_params)
+from repro.serve import (RequestStream, ServeConfig,
+                         poisson_request_stream, round_synchronous_stream,
+                         serve_stream)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # container without hypothesis: skip the
+    HAVE_HYPOTHESIS = False    # property test, keep the rest
+
+
+# ------------------------------------------------------------------ parity
+def _parity_case(policy, params, seed=11, cells=8, n_max=4, rounds=6,
+                 rate=2.0):
+    """Serve the same trace through the round gateway and the engine in
+    degenerate round-synchronous mode; return both reports."""
+    scn = random_fleet(jax.random.PRNGKey(seed), cells, n_max=n_max)
+    cfg = FleetConfig(n_max=n_max, quiet=True)
+    trace = poisson_round_trace(jax.random.PRNGKey(seed + 1), scn,
+                                rounds, rate=rate)
+    rep = replay_trace(policy, params, scn, trace, cfg,
+                       key=jax.random.PRNGKey(seed + 2))
+    scfg = ServeConfig(n_max=n_max, quiet=True)
+    stream = round_synchronous_stream(np.asarray(trace), scfg.round_ms)
+    req = serve_stream(policy, params, scn, stream, scfg,
+                       key=jax.random.PRNGKey(seed + 2))
+    return rep, req
+
+
+def test_round_request_parity_greedy():
+    """Degenerate-mode engine == round replay for the greedy baseline:
+    request-weighted ART and violation rate agree to 1e-5, every traced
+    request is served, none dropped or deferred."""
+    cfg = FleetConfig(n_max=4, quiet=True)
+    pol = heuristic_greedy_policy(cfg.spec())
+    rep, req = _parity_case(pol, pol.init(jax.random.PRNGKey(0)))
+    assert req["served_requests"] == rep["served_requests"]
+    assert req["dropped_requests"] == 0
+    assert req["deferred_requests"] == 0
+    assert abs(req["mean_art_ms"] - rep["mean_art_ms"]) < 1e-5
+    assert abs(req["violation_rate"] - rep["violation_rate"]) < 1e-5
+    assert req["violation_rate"] == 0.0
+
+
+def test_round_request_parity_violating_dqn():
+    """Parity must hold for a policy that actually violates (an untrained
+    DQN), not just the always-feasible baseline."""
+    cfg = FleetConfig(n_max=4, quiet=True)
+    pol = dqn_policy(cfg.spec(), hidden=(16,))
+    params = pol.init(jax.random.PRNGKey(5))
+    rep, req = _parity_case(pol, params)
+    assert rep["violation_rate"] > 0.0   # meaningful case
+    assert abs(req["mean_art_ms"] - rep["mean_art_ms"]) < 1e-5
+    assert abs(req["violation_rate"] - rep["violation_rate"]) < 1e-5
+
+
+def test_degenerate_stream_matches_trace():
+    trace = np.array([[1, 3], [2, 1], [3, 2]])
+    stream = round_synchronous_stream(trace, 200.0)
+    assert stream.n_requests == trace.sum()
+    np.testing.assert_array_equal(stream.per_cell_counts(),
+                                  trace.sum(0))
+    # all arrivals on round boundaries, deadline = round horizon
+    assert set(np.asarray(stream.t_ms)) <= {0.0, 200.0, 400.0}
+    assert np.all(np.asarray(stream.slo_ms) == 200.0)
+
+
+# ----------------------------------------------------------------- streams
+def test_poisson_request_stream_no_clipping():
+    """Heterogeneous rates, unclipped: a zero-rate cell stays empty (a
+    round trace would force 1 request/round into it) and a hot cell's
+    total far exceeds the n_max-per-round ceiling's capacity."""
+    scn = random_fleet(jax.random.PRNGKey(0), 4, n_max=3)
+    rates = np.array([0.0, 1.0, 3.0, 30.0])
+    stream = poisson_request_stream(jax.random.PRNGKey(1), scn, 5000.0,
+                                    rate=rates, round_ms=250.0)
+    counts = stream.per_cell_counts()
+    assert counts[0] == 0                       # idle cells idle
+    assert counts[3] > 20 * 3                   # bursts beyond n_max*T/…
+    assert np.all(np.diff(stream.t_ms) >= 0)    # arrival-sorted
+    # SLO budgets come from the scenario's per-cell latency targets
+    targets = np.asarray(scn.latency_targets())
+    np.testing.assert_allclose(np.asarray(stream.slo_ms),
+                               targets[stream.cell])
+
+
+def test_poisson_round_trace_hetero_rates_and_clip_stats():
+    scn = random_fleet(jax.random.PRNGKey(2), 3, n_max=4)
+    rates = jnp.asarray([0.0, 3.0, 40.0])
+    trace, stats = poisson_round_trace(jax.random.PRNGKey(3), scn, 30,
+                                       rate=rates, with_stats=True)
+    assert trace.shape == (30, 3)
+    t = np.asarray(trace)
+    assert t.min() >= 1 and t.max() <= 4        # compat clip unchanged
+    assert np.all(t[:, 0] == 1)                 # rate-0 cell floor-filled
+    assert stats["floored_rounds"] >= 30
+    # the rate-40 cell alone guarantees heavy clipping
+    assert 0.0 < stats["clipped_fraction"] < 1.0
+    assert stats["clipped_requests"] > stats["served_requests"]
+    assert (stats["raw_requests"]
+            >= stats["served_requests"] - stats["floored_rounds"])
+    # default return shape is unchanged (compat)
+    only = poisson_round_trace(jax.random.PRNGKey(3), scn, 30, rate=rates)
+    np.testing.assert_array_equal(np.asarray(only), t)
+
+
+# ------------------------------------------------------------------ engine
+def test_burst_queues_and_drains_in_fifo_rounds():
+    """3*n_max simultaneous requests at one cell: nothing clipped, the
+    backlog drains as three consecutive full rounds with strictly
+    increasing queueing waits."""
+    n_max = 3
+    scn = random_fleet(jax.random.PRNGKey(4), 2, n_max=n_max)
+    scfg = ServeConfig(n_max=n_max, quiet=True, tick_ms=50.0)
+    t = np.zeros(3 * n_max, np.float32)
+    cell = np.zeros(3 * n_max, np.int32)
+    stream = RequestStream(t, cell, np.full(t.shape, 1e9, np.float32),
+                           horizon_ms=12 * 50.0, epoch_ms=12 * 50.0,
+                           n_cells=2)
+    pol = heuristic_greedy_policy(scfg.fleet().spec())
+    rep = serve_stream(pol, pol.init(jax.random.PRNGKey(0)), scn,
+                       stream, scfg, key=jax.random.PRNGKey(1))
+    assert rep["served_requests"] == 3 * n_max
+    assert rep["dropped_requests"] == 0
+    waits = rep["records"]["wait_ms"]
+    # FIFO: round k starts after round k-1's n_max ticks
+    expect = np.repeat([0.0, 3 * 50.0, 6 * 50.0], n_max)
+    np.testing.assert_allclose(waits, expect)
+
+
+def test_queue_overflow_drops_are_counted():
+    n_max = 3
+    scn = random_fleet(jax.random.PRNGKey(6), 2, n_max=n_max)
+    scfg = ServeConfig(n_max=n_max, quiet=True, queue_cap=2)
+    t = np.zeros(10, np.float32)
+    cell = np.zeros(10, np.int32)
+    stream = RequestStream(t, cell, np.full(10, 1e9, np.float32),
+                           horizon_ms=600.0, epoch_ms=600.0, n_cells=2)
+    pol = heuristic_greedy_policy(scfg.fleet().spec())
+    rep = serve_stream(pol, pol.init(jax.random.PRNGKey(0)), scn,
+                       stream, scfg, key=jax.random.PRNGKey(1))
+    # queue_cap=2 admits 2 of the 10 simultaneous arrivals; the rest are
+    # rejected drops, never silent clips
+    assert rep["dropped_requests"] == 8
+    assert rep["served_requests"] == 2
+    assert rep["served_requests"] + rep["dropped_requests"] \
+        + rep["deferred_requests"] == 10
+
+
+def test_epoch_split_never_changes_serving_outcomes():
+    """The epoch split is an orchestration knob (param refresh / hot-swap
+    cadence): served/deferred/drop counts and SLO attainment must be
+    identical under any epoch_ms for the same stream — including a
+    tail burst arriving in the horizon's last tick interval."""
+    n_max = 3
+    scn = random_fleet(jax.random.PRNGKey(15), 3, n_max=n_max)
+    scfg = ServeConfig(n_max=n_max, quiet=True)
+    t = np.array([0.0, 100.0, 590.0, 590.0, 590.0], np.float32)
+    cell = np.array([0, 1, 2, 2, 2], np.int32)
+    pol = heuristic_greedy_policy(scfg.fleet().spec())
+    reps = []
+    for epoch_ms in (600.0, 150.0, 50.0):
+        stream = RequestStream(t, cell,
+                               np.full(t.shape, 400.0, np.float32),
+                               horizon_ms=600.0, epoch_ms=epoch_ms,
+                               n_cells=3)
+        reps.append(serve_stream(pol, pol.init(jax.random.PRNGKey(0)),
+                                 scn, stream, scfg,
+                                 key=jax.random.PRNGKey(1)))
+    for k in ("served_requests", "dropped_requests", "deferred_requests",
+              "slo_attainment", "n_ticks"):
+        assert len({r[k] for r in reps}) == 1, (k, [r[k] for r in reps])
+    np.testing.assert_array_equal(reps[0]["records"]["served"],
+                                  reps[1]["records"]["served"])
+    # the tail burst is admitted (it arrived before the horizon) but
+    # cannot finish inside the window — deferred under every split
+    assert reps[0]["deferred_requests"] == 3
+
+
+def test_engine_rejects_host_side_policy():
+    scn = random_fleet(jax.random.PRNGKey(0), 2, n_max=3)
+    scfg = ServeConfig(n_max=3)
+    stream = round_synchronous_stream(np.ones((2, 2), int), scfg.round_ms)
+    with pytest.raises(ValueError, match="host-side"):
+        serve_stream(qtable_policy(), {}, scn, stream, scfg)
+
+
+def test_epoch_hot_swap_callback():
+    """on_epoch fires once per stream epoch in order — the bundle
+    hot-swap point; swapped params serve the remaining epochs."""
+    n_max = 3
+    scn = random_fleet(jax.random.PRNGKey(7), 4, n_max=n_max)
+    scfg = ServeConfig(n_max=n_max, quiet=True)
+    trace = poisson_round_trace(jax.random.PRNGKey(8), scn, 8, rate=2.0)
+    stream = round_synchronous_stream(np.asarray(trace), scfg.round_ms,
+                                      epoch_ms=2 * scfg.round_ms)
+    pol = dqn_policy(scfg.fleet().spec(), hidden=(8,))
+    p0 = pol.init(jax.random.PRNGKey(0))
+    p1 = pol.init(jax.random.PRNGKey(1))
+    calls = []
+
+    def on_epoch(e, params):
+        calls.append(e)
+        return p1 if e >= 2 else p0
+
+    rep = serve_stream(pol, p0, scn, stream, scfg,
+                       key=jax.random.PRNGKey(2), on_epoch=on_epoch)
+    # 8 rounds x 3 ticks + 1 drain tick = 25 ticks over 6-tick epochs
+    assert calls == list(range(rep["n_epochs"])) and rep["n_epochs"] == 5
+    assert rep["served_requests"] == int(np.asarray(trace).sum())
+
+
+# ----------------------------------------------------------------- guarded
+def _worst_accuracy_policy(spec):
+    """Always picks d7 — fastest, least accurate tier."""
+    return Policy("d7", lambda key: {},
+                  jax.jit(lambda params, obs, key:
+                          jnp.full((obs.shape[0],), 7, jnp.int32)))
+
+
+def test_slo_guarded_restores_feasibility():
+    """A d7-everywhere policy violates heavily; guarded by the greedy
+    fallback it inherits the zero-violation property while still serving
+    d7 whenever the constraint allows it."""
+    n_max = 4
+    scn = random_fleet(jax.random.PRNGKey(9), 12, n_max=n_max)
+    cfg = FleetConfig(n_max=n_max, quiet=True)
+    trace = poisson_round_trace(jax.random.PRNGKey(10), scn, 4, rate=2.0)
+    bad = _worst_accuracy_policy(cfg.spec())
+    rep_bad = replay_trace(bad, {}, scn, trace, cfg,
+                           key=jax.random.PRNGKey(11))
+    assert rep_bad["violation_rate"] > 0.5
+    fb = heuristic_greedy_policy(cfg.spec())
+    guarded = slo_guarded(bad, cfg.spec(), fb)
+    params = slo_guarded_params({}, fb.init(jax.random.PRNGKey(0)))
+    rep_ok = replay_trace(guarded, params, scn, trace, cfg,
+                          key=jax.random.PRNGKey(11))
+    assert rep_ok["violation_rate"] == 0.0
+    # the guard is surgical, not a blanket fallback: it keeps serving d7
+    # wherever feasible, so its trajectory differs from always-greedy
+    fb_rep = replay_trace(fb, fb.init(jax.random.PRNGKey(0)), scn, trace,
+                          cfg, key=jax.random.PRNGKey(11))
+    assert abs(rep_ok["mean_art_ms"] - fb_rep["mean_art_ms"]) > 1e-6
+
+
+def test_slo_guarded_through_request_engine():
+    """The guarded combinator is jittable end-to-end: request-level
+    serving of a violating DQN under the guard is violation-free."""
+    n_max = 3
+    scn = random_fleet(jax.random.PRNGKey(12), 6, n_max=n_max)
+    scfg = ServeConfig(n_max=n_max, quiet=True)
+    spec = scfg.fleet().spec()
+    dqn = dqn_policy(spec, hidden=(8,))
+    guarded = slo_guarded(dqn, spec)
+    params = slo_guarded_params(
+        dqn.init(jax.random.PRNGKey(0)),
+        heuristic_greedy_policy(spec).init(jax.random.PRNGKey(1)))
+    stream = poisson_request_stream(jax.random.PRNGKey(13), scn, 3000.0,
+                                    rate=2.0, round_ms=scfg.round_ms)
+    rep = serve_stream(guarded, params, scn, stream, scfg,
+                       key=jax.random.PRNGKey(14))
+    assert rep["served_requests"] > 0
+    assert rep["violation_rate"] == 0.0
+
+
+# --------------------------------------------------------------- property
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None)
+    @given(st.lists(st.tuples(st.floats(0.0, 590.0), st.integers(0, 2)),
+                    min_size=1, max_size=18),
+           st.integers(0, 2 ** 31 - 1))
+    def test_no_latency_precedes_arrival(reqs, seed):
+        """For every served request: queueing wait >= 0 (service cannot
+        start before arrival) and end-to-end latency >= service time;
+        every request is accounted exactly once."""
+        n_max = 3
+        scn = random_fleet(jax.random.PRNGKey(seed % 1000), 3,
+                           n_max=n_max)
+        scfg = ServeConfig(n_max=n_max, quiet=True, queue_cap=4)
+        t = np.asarray([r[0] for r in reqs], np.float32)
+        cell = np.asarray([r[1] for r in reqs], np.int32)
+        order = np.argsort(t, kind="stable")
+        stream = RequestStream(t[order], cell[order],
+                               np.full(t.shape, 300.0, np.float32),
+                               horizon_ms=600.0, epoch_ms=600.0,
+                               n_cells=3)
+        pol = heuristic_greedy_policy(scfg.fleet().spec())
+        rep = serve_stream(pol, pol.init(jax.random.PRNGKey(0)), scn,
+                           stream, scfg, key=jax.random.PRNGKey(1))
+        rec = rep["records"]
+        served = rec["served"]
+        assert np.all(rec["wait_ms"][served] >= -1e-6)
+        assert np.all(rec["service_ms"][served] > 0.0)
+        e2e = rec["wait_ms"] + rec["service_ms"]
+        assert np.all(e2e[served] >= rec["service_ms"][served] - 1e-6)
+        # service start (arrival + wait) never precedes arrival, and it
+        # lands on a tick at or after the admitting tick boundary
+        start = stream.t_ms[served] + rec["wait_ms"][served]
+        assert np.all(start >= stream.t_ms[served] - 1e-3)
+        assert (int(served.sum()) + rep["dropped_requests"]
+                + rep["deferred_requests"]) == stream.n_requests
