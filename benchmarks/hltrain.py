@@ -51,6 +51,7 @@ from repro.fleet.workload import FleetScenario
 from repro.hltrain import (FleetHLParams, make_hl_trainer,
                            evaluate_vs_solver, optimal_rewards,
                            run_curriculum)
+from repro.telemetry import profiled
 
 CONV_SCENARIO, CONV_CONSTRAINT = "B", "85%"  # the n=5 convergence target
 GEN_N_MAX = 32  # held-out generalization fleet size (ROADMAP item)
@@ -97,17 +98,21 @@ def bench_fleet_throughput(hp: FleetHLParams, n_tiles: int,
     cfg = FleetConfig(n_max=5)
     trainer = make_hl_trainer(cfg, hp)
     state = trainer.init(jax.random.PRNGKey(0), scn)
-    t0 = time.perf_counter()
-    state, _ = jax.block_until_ready(trainer.run(state, scn, 0, chunk))
-    compile_s = time.perf_counter() - t0
-    r0 = int(state.real_steps)
-    t0 = time.perf_counter()
-    state, _ = jax.block_until_ready(trainer.run(state, scn, chunk, chunk))
-    dt = time.perf_counter() - t0
+    with profiled("hltrain_throughput") as prof:
+        state, _ = jax.block_until_ready(trainer.run(state, scn, 0, chunk))
+        prof.split()  # chunk 1 paid the XLA compile
+        r0 = int(state.real_steps)
+        state, _ = jax.block_until_ready(
+            trainer.run(state, scn, chunk, chunk))
     steps = int(state.real_steps) - r0
+    dt = prof.run_time_s
     return {"n_cells": scn.n_cells, "steps_per_s": steps / dt,
             "timed_steps": steps, "timed_wall_s": dt,
-            "compile_plus_first_chunk_s": compile_s}
+            "compile_plus_first_chunk_s": prof.compile_time_s,
+            "compile_time_s": round(prof.compile_time_s, 3),
+            "run_time_s": round(prof.run_time_s, 3),
+            "peak_memory_mb": round(prof.peak_memory_mb, 1),
+            "memory_source": prof.memory_source}
 
 
 def bench_convergence(hp: FleetHLParams, n_cells: int, chunk: int,
@@ -255,6 +260,10 @@ def main(smoke: bool = False, cells: int = 320, conv_cells: int = 64,
 
     result = {
         "smoke": smoke,
+        # profiled() split of the jitted-trainer throughput section
+        "compile_time_s": fl["compile_time_s"],
+        "run_time_s": fl["run_time_s"],
+        "peak_memory_mb": fl["peak_memory_mb"],
         "python_hl": {k: round(v, 3) if isinstance(v, float) else v
                       for k, v in py.items()},
         "fleet_hl": {k: round(v, 3) if isinstance(v, float) else v

@@ -24,8 +24,11 @@ baseline's zero accuracy-violation property.
 Writes ``BENCH_serve.json`` with per-policy round-level figures
 (``violation_rate``, request-weighted ART vs optimum, ``decisions_per_s``)
 and request-level figures (``p50/p95/p99_latency_ms``, ``slo_attainment``,
-``dropped_requests``, ``request_decisions_per_s``).  ``--smoke`` shrinks
-training to a minutes-scale CI job and marks the JSON ``smoke: true``.
+``dropped_requests``, ``request_decisions_per_s``), plus the
+``repro.telemetry.profiled`` compile-vs-run wall-clock split and peak
+memory (``compile_time_s`` / ``run_time_s`` / ``peak_memory_mb``) — CI
+gates on those fields being present.  ``--smoke`` shrinks training to a
+minutes-scale CI job and marks the JSON ``smoke: true``.
 """
 from __future__ import annotations
 
@@ -43,6 +46,7 @@ from repro.policy import (PolicyBundle, heuristic_greedy_policy,
                           load_bundle, policy_from_bundle, save_bundle,
                           solve_oracle)
 from repro.serve import ServeConfig, poisson_request_stream, serve_stream
+from repro.telemetry import profiled
 
 N_MAX = 5
 OBS_SPEC = "full"
@@ -119,47 +123,57 @@ def main(smoke: bool = False, cells: int = 64, rounds: int = 40,
     served["hltrain_guarded"] = guarded_bundle_policy(loaded["hltrain"],
                                                       k_guard)
 
+    # None-safe rounding: zero-served runs report None tails / ART, and a
+    # bare round(None) would crash the benchmark after the work is done
     rnd = lambda v, d: None if v is None else round(v, d)
     policies = {}
-    for name, (policy, params) in served.items():
-        rep = replay_trace(policy, params, scenario, trace, cfg,
-                           key=k_serve, oracle=oracle)
-        req = serve_stream(policy, params, scenario, stream, scfg,
-                           key=k_serve)
-        policies[name] = {
-            # round-replay compat figures
-            "violation_rate": rep["violation_rate"],
-            "mean_art_ms": round(rep["mean_art_ms"], 2),
-            "opt_art_ms": round(rep["opt_art_ms"], 2),
-            "mean_reward": round(rep["mean_reward"], 4),
-            "opt_reward": round(rep["opt_reward"], 4),
-            "served_requests": rep["served_requests"],
-            "decisions_per_s": rnd(rep["decisions_per_s"], 1),
-            # request-level figures
-            "p50_latency_ms": rnd(req["p50_latency_ms"], 2),
-            "p95_latency_ms": rnd(req["p95_latency_ms"], 2),
-            "p99_latency_ms": rnd(req["p99_latency_ms"], 2),
-            "slo_attainment": round(req["slo_attainment"], 4),
-            "request_violation_rate": round(req["violation_rate"], 4),
-            "served_request_level": req["served_requests"],
-            "dropped_requests": req["dropped_requests"],
-            "deferred_requests": req["deferred_requests"],
-            "request_decisions_per_s": rnd(req["decisions_per_s"], 1),
-        }
-        print(f"— {name}: round replay {rep['served_requests']:,} req, "
-              f"ART {rep['mean_art_ms']:.1f} ms "
-              f"(opt {rep['opt_art_ms']:.1f}), violations "
-              f"{rep['violation_rate']:.1%}, "
-              f"{rep['decisions_per_s'] or 0:,.0f} dec/s —")
-        print(f"  request level: {req['served_requests']:,}/"
-              f"{req['n_requests']:,} served "
-              f"({req['dropped_requests']} dropped), p50/p95/p99 "
-              f"{req['p50_latency_ms'] or 0:.0f}/"
-              f"{req['p95_latency_ms'] or 0:.0f}/"
-              f"{req['p99_latency_ms'] or 0:.0f} ms, SLO "
-              f"{req['slo_attainment']:.1%}, violations "
-              f"{req['violation_rate']:.1%}, "
-              f"{req['decisions_per_s'] or 0:,.0f} dec/s")
+    prof = None
+    with profiled("serve_bench") as prof:
+        for name, (policy, params) in served.items():
+            rep = replay_trace(policy, params, scenario, trace, cfg,
+                               key=k_serve, oracle=oracle)
+            req = serve_stream(policy, params, scenario, stream, scfg,
+                               key=k_serve)
+            if prof._t_split is None:
+                prof.split()  # the first policy paid the XLA compiles
+            policies[name] = {
+                # round-replay compat figures
+                "violation_rate": rep["violation_rate"],
+                "mean_art_ms": rnd(rep["mean_art_ms"], 2),
+                "opt_art_ms": rnd(rep["opt_art_ms"], 2),
+                "mean_reward": rnd(rep["mean_reward"], 4),
+                "opt_reward": rnd(rep["opt_reward"], 4),
+                "served_requests": rep["served_requests"],
+                "decisions_per_s": rnd(rep["decisions_per_s"], 1),
+                # request-level figures
+                "p50_latency_ms": rnd(req["p50_latency_ms"], 2),
+                "p95_latency_ms": rnd(req["p95_latency_ms"], 2),
+                "p99_latency_ms": rnd(req["p99_latency_ms"], 2),
+                "slo_attainment": rnd(req["slo_attainment"], 4),
+                "request_violation_rate": rnd(req["violation_rate"], 4),
+                "served_request_level": req["served_requests"],
+                "dropped_requests": req["dropped_requests"],
+                "deferred_requests": req["deferred_requests"],
+                "request_decisions_per_s": rnd(req["decisions_per_s"], 1),
+                # engine-measured compile/run split for this policy's
+                # request-level run
+                "compile_time_s": rnd(req.get("compile_time_s"), 3),
+                "run_time_s": rnd(req.get("run_time_s"), 3),
+            }
+            print(f"— {name}: round replay {rep['served_requests']:,} req, "
+                  f"ART {rep['mean_art_ms'] or 0:.1f} ms "
+                  f"(opt {rep['opt_art_ms'] or 0:.1f}), violations "
+                  f"{rep['violation_rate']:.1%}, "
+                  f"{rep['decisions_per_s'] or 0:,.0f} dec/s —")
+            print(f"  request level: {req['served_requests']:,}/"
+                  f"{req['n_requests']:,} served "
+                  f"({req['dropped_requests']} dropped), p50/p95/p99 "
+                  f"{req['p50_latency_ms'] or 0:.0f}/"
+                  f"{req['p95_latency_ms'] or 0:.0f}/"
+                  f"{req['p99_latency_ms'] or 0:.0f} ms, SLO "
+                  f"{req['slo_attainment'] or 0:.1%}, violations "
+                  f"{req['violation_rate']:.1%}, "
+                  f"{req['decisions_per_s'] or 0:,.0f} dec/s")
 
     result = {
         "smoke": smoke,
@@ -176,6 +190,9 @@ def main(smoke: bool = False, cells: int = 64, rounds: int = 40,
             (p["request_decisions_per_s"] for p in policies.values()
              if p["request_decisions_per_s"] is not None),
             default=None),
+        # profiled() split over the whole serving block: the first
+        # policy's first calls carry every XLA compile
+        **{k: v for k, v in prof.report().items() if k != "label"},
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)

@@ -18,7 +18,8 @@ from repro.hltrain.buffers import (Ring, PrioRing, PlanRing, ring_init,
                                    hash_state_action)
 from repro.hltrain.trainer import (FleetHLParams, FleetHLTrainer,
                                    HLTrainState, make_hl_trainer,
-                                   run_curriculum, session_schedule)
+                                   run_curriculum, session_schedule,
+                                   train_telemetry_report)
 from repro.hltrain.metrics import (real_step_budget, optimal_rewards,
                                    reward_from_round, evaluate_vs_solver,
                                    history_to_dict)
@@ -28,7 +29,7 @@ __all__ = [
     "prio_init", "prio_add", "prio_sample", "prio_update",
     "plan_init", "plan_contains", "plan_add", "hash_state_action",
     "FleetHLParams", "FleetHLTrainer", "HLTrainState", "make_hl_trainer",
-    "run_curriculum", "session_schedule",
+    "run_curriculum", "session_schedule", "train_telemetry_report",
     "real_step_budget", "optimal_rewards", "reward_from_round",
     "evaluate_vs_solver", "history_to_dict",
 ]

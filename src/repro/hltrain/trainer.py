@@ -55,6 +55,9 @@ from repro.hltrain.buffers import (Ring, PrioRing, PlanRing, ring_init,
                                    plan_init, plan_contains, plan_add,
                                    hash_state_action)
 from repro.policy.adapters import dqn_policy
+from repro.telemetry.metrics import (buffer_series, count_event,
+                                     histogram_percentiles, metrics_init,
+                                     observe_values, set_gauge)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +94,11 @@ class FleetHLParams:
     plan_cap: int = 4096
     hidden: tuple = (128, 128)
     seed: int = 0
+    # per-session training telemetry: epsilon / reward / TD-loss gauges at
+    # direct-session granularity plus a log-spaced |TD-error| histogram,
+    # accumulated on device inside the session scans (window = direct
+    # session index; read back with ``train_telemetry_report``)
+    telemetry: bool = False
 
 
 class HLTrainState(NamedTuple):
@@ -108,6 +116,7 @@ class HLTrainState(NamedTuple):
     direct_steps: jnp.ndarray     # () int32 — total real direct transitions
     verify_steps: jnp.ndarray     # () int32 — total real verifications
     sessions: jnp.ndarray         # () int32 — direct sessions completed
+    tel: object = None            # MetricBuffer (None = telemetry off)
 
     @property
     def real_steps(self):
@@ -172,7 +181,16 @@ def make_hl_trainer(cfg: FleetConfig, hp: FleetHLParams = None,
         env_state = env.init(k_env, scenario)
         jitter = hp.eps_cell_jitter * (
             2.0 * jax.random.uniform(k_eps, (n_cells,)) - 1.0)
-        zero = jnp.zeros((), jnp.int32)
+        # distinct buffers per counter: the donated epoch scan may not
+        # receive one buffer aliased across carry leaves
+        zero = lambda: jnp.zeros((), jnp.int32)
+        # one telemetry window per direct-session slot; |TD| magnitudes
+        # live well inside [1e-3, 1e3] at REWARD_SCALE units
+        tel = (metrics_init(hp.epochs * hp.n_direct,
+                            counters=("direct_steps",),
+                            gauges=("epsilon", "mean_reward", "q_loss"),
+                            lo=1e-3, hi=1e3, bins=128)
+               if hp.telemetry else None)
         return HLTrainState(
             key=key, dqn=dqn_init(k_dqn), sm=sm_init(k_sm),
             d_direct=prio_init(hp.direct_cap, state_dim),
@@ -180,8 +198,8 @@ def make_hl_trainer(cfg: FleetConfig, hp: FleetHLParams = None,
             d_plan=plan_init(hp.plan_cap, state_dim),
             env=env_state, obs=env.observe(scenario, env_state),
             eps_scale=1.0 + jitter,
-            steps_per_cell=zero, direct_steps=zero, verify_steps=zero,
-            sessions=zero)
+            steps_per_cell=zero(), direct_steps=zero(),
+            verify_steps=zero(), sessions=zero(), tel=tel)
 
     def resume(state: HLTrainState, scenario: FleetScenario) -> HLTrainState:
         """Re-anchor the carry after a scenario swap (user counts only):
@@ -228,7 +246,12 @@ def make_hl_trainer(cfg: FleetConfig, hp: FleetHLParams = None,
             # pre-warmup minibatches gather unwritten slots; keep their
             # (meaningless) loss out of the metrics
             loss = jnp.where(ready, loss, jnp.nan)
-            return st._replace(key=key, dqn=dqn), buf, ready, loss
+            st = st._replace(key=key, dqn=dqn)
+            if hp.telemetry:  # |TD-error| distribution across all updates
+                st = st._replace(tel=observe_values(
+                    st.tel, jnp.abs(td),
+                    ready & jnp.ones(hp.batch, bool)))
+            return st, buf, ready, loss
 
         def direct_session(st):
             st, rs = jax.lax.scan(direct_step, st, None, length=hp.t_direct)
@@ -240,6 +263,16 @@ def make_hl_trainer(cfg: FleetConfig, hp: FleetHLParams = None,
             st, losses = jax.lax.scan(upd, st, None,
                                       length=hp.updates_per_direct)
             loss = losses.mean()
+            if hp.telemetry:
+                # window = this direct session's global index; inactive
+                # (masked) session slots are reverted by the epoch scan
+                w = jnp.minimum(st.sessions, hp.epochs * hp.n_direct - 1)
+                tel = count_event(st.tel, "direct_steps", w,
+                                  hp.t_direct * n_cells)
+                tel = set_gauge(tel, "epsilon", w, epsilon(st).mean())
+                tel = set_gauge(tel, "mean_reward", w, rs.mean())
+                tel = set_gauge(tel, "q_loss", w, loss)
+                st = st._replace(tel=tel)
             st = st._replace(sessions=st.sessions + 1)
             sync = (st.sessions % hp.target_sync_every) == 0
             dqn = _where_tree(sync, dqn_sync(st.dqn), st.dqn)
@@ -350,7 +383,10 @@ def make_hl_trainer(cfg: FleetConfig, hp: FleetHLParams = None,
         return epoch
 
     # ----------------------------------------------------------------- run
-    @functools.partial(jax.jit, static_argnames=("n_epochs",))
+    # the carry (params, buffers, env, telemetry accumulators) is donated:
+    # on backends with donation each chunk updates its buffers in place
+    @functools.partial(jax.jit, static_argnames=("n_epochs",),
+                       donate_argnums=(0,))
     def run(state: HLTrainState, scenario: FleetScenario,
             epoch_start, n_epochs: int):
         epoch = make_phases(scenario)
@@ -359,6 +395,27 @@ def make_hl_trainer(cfg: FleetConfig, hp: FleetHLParams = None,
 
     return FleetHLTrainer(init=init, run=run, resume=resume,
                           policy=policy)
+
+
+def train_telemetry_report(state: HLTrainState) -> dict:
+    """Host-side view of a telemetry-enabled trainer's metric buffer:
+    per-direct-session series (epsilon, mean reward, TD loss, real direct
+    steps) truncated to the sessions actually run, plus the |TD-error|
+    histogram and its p50/p95/p99."""
+    if state.tel is None:
+        raise ValueError("trainer ran with FleetHLParams.telemetry=False; "
+                         "no metric buffer to report")
+    s = buffer_series(state.tel)
+    n = int(state.sessions)
+    out = {"n_sessions": n,
+           "direct_steps": s["counters"]["direct_steps"][:n].tolist(),
+           "td_hist": s["hist"].tolist(),
+           "td_hist_edges": np.round(s["edges"], 6).tolist()}
+    for name, v in s["gauges"].items():
+        out[name] = [None if np.isnan(x) else float(x) for x in v[:n]]
+    for p, v in histogram_percentiles(s["hist"], s["edges"]).items():
+        out[f"td_{p}"] = v
+    return out
 
 
 def run_curriculum(trainer: FleetHLTrainer, stages, epochs: int,

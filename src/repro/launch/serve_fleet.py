@@ -4,6 +4,8 @@
         --bundle results/hl_fleet.bundle.msgpack --rounds 50 \
         [--cells 64] [--rate 3.0] [--seed 0] [--quiet] [--guard] \
         [--tick-ms 50] [--queue-cap 64] [--epochs 5] \
+        [--telemetry] [--window-ms 1000] \
+        [--trace-out trace.jsonl] [--trace-sample 1.0] \
         [--round-replay] [--out serve.json]
 
 This module is a thin shell over ``repro.serve``: it loads a
@@ -25,6 +27,18 @@ through the bundle's ``Policy``:
   exact solver oracle, labeled with the fraction of burst mass the round
   abstraction clipped.
 
+Observability: ``--telemetry`` threads a ``repro.telemetry`` metric
+buffer through the engine's tick scan (per-``--window-ms`` queue depth /
+backlog / occupancy / attainment series + latency histogram, in the
+report under ``"telemetry"``); ``--trace-out`` writes a sampled
+per-request lifecycle trace as JSONL (``--trace-sample`` is the
+deterministic id-hash sampling rate) which
+``python -m repro.telemetry.report`` renders into a run summary.
+
+Every run echoes its resolved seed and config in the output header (and
+records them under ``"config"`` in the report), so any served run can be
+reproduced bit-exactly from its printout alone.
+
 The bundle's recorded observation spec decides the encoding end-to-end;
 loading a bundle under a different spec/n_max raises before a single
 request is served.
@@ -43,6 +57,7 @@ from repro.policy.adapters import (heuristic_greedy_policy, slo_guarded,
 from repro.policy.api import Policy
 from repro.policy.bundle import load_bundle, policy_from_bundle
 from repro.serve import (ServeConfig, poisson_request_stream, serve_stream)
+from repro.telemetry import build_trace, write_trace
 # compat re-exports: tests and benchmarks historically import the round
 # gateway from this module
 from repro.serve.compat import make_gateway, replay_trace  # noqa: F401
@@ -62,6 +77,8 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
                  rate: float = 3.0, seed: int = 0, quiet: bool = False,
                  guard: bool = False, tick_ms: float = 50.0,
                  queue_cap: int = 64, epochs: int = 5,
+                 telemetry: bool = False, window_ms: float = 1000.0,
+                 trace_out: str = None, trace_sample: float = 1.0,
                  round_replay: bool = False,
                  verbose: bool = True) -> dict:
     """Load a PolicyBundle, build a held-out random fleet at the bundle's
@@ -83,6 +100,15 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
     else:
         policy, params = policy_from_bundle(bundle)
 
+    # the resolved run config: echoed in the header and recorded in the
+    # report so any served run is reproducible bit-exactly
+    config = dict(bundle=bundle_path, seed=seed, cells=cells,
+                  rounds=rounds, rate=rate, quiet=quiet, guard=guard,
+                  tick_ms=tick_ms, queue_cap=queue_cap, epochs=epochs,
+                  telemetry=telemetry, window_ms=window_ms,
+                  trace_sample=trace_sample, round_replay=round_replay,
+                  obs_spec=bundle.obs_spec, n_max=bundle.n_max,
+                  **couplings)
     if verbose:
         on = [c for c, v in couplings.items() if v] or ["uncoupled"]
         print(f"bundle {bundle_path}: kind {policy.kind!r}, obs spec "
@@ -92,8 +118,13 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
               f"Poisson(rate={rate}), background "
               f"{'quiet' if quiet else 'fluctuating'}, "
               f"{'round replay' if round_replay else 'request stream'}")
+        print("config: " + " ".join(f"{k}={v}"
+                                    for k, v in sorted(config.items())))
 
     if round_replay:
+        if trace_out or telemetry:
+            raise SystemExit("--telemetry/--trace-out are request-level "
+                             "features; drop --round-replay to use them")
         cfg = FleetConfig(n_max=bundle.n_max, obs_spec=bundle.obs_spec,
                           quiet=quiet, **couplings)
         trace, stats = poisson_round_trace(k_trace, scenario, rounds,
@@ -120,7 +151,8 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
     else:
         cfg = ServeConfig(n_max=bundle.n_max, obs_spec=bundle.obs_spec,
                           quiet=quiet, tick_ms=tick_ms,
-                          queue_cap=queue_cap, **couplings)
+                          queue_cap=queue_cap, telemetry=telemetry,
+                          window_ms=window_ms, **couplings)
         horizon_ms = rounds * cfg.round_ms
         stream = poisson_request_stream(
             k_trace, scenario, horizon_ms, rate=rate,
@@ -129,6 +161,13 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
         report = serve_stream(policy, params, scenario, stream, cfg,
                               key=k_serve, verbose=verbose)
         report["horizon_ms"] = horizon_ms
+        if trace_out:
+            events = build_trace(stream, report["records"], tick_ms,
+                                 sample=trace_sample)
+            write_trace(trace_out, events)
+            if verbose:
+                print(f"wrote {len(events)} trace events "
+                      f"(sample={trace_sample:g}) to {trace_out}")
         if verbose:
             dps = report["decisions_per_s"]
             tail = (f"latency p50/p95/p99 "
@@ -151,6 +190,7 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
                         "n_max": bundle.n_max,
                         "version": bundle.version,
                         "guarded": bool(guard)}
+    report["config"] = config
     return report
 
 
@@ -176,6 +216,17 @@ def main():
     ap.add_argument("--epochs", type=int, default=5,
                     help="stream epochs (param-refresh / hot-swap "
                          "boundaries)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="thread a repro.telemetry metric buffer through "
+                         "the tick scan (windowed series + latency "
+                         "histogram under 'telemetry' in the report)")
+    ap.add_argument("--window-ms", type=float, default=1000.0,
+                    help="telemetry aggregation window")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a sampled per-request lifecycle trace "
+                         "as JSONL (render with repro.telemetry.report)")
+    ap.add_argument("--trace-sample", type=float, default=1.0,
+                    help="deterministic id-hash trace sampling rate")
     ap.add_argument("--round-replay", action="store_true",
                     help="compat mode: round-synchronous trace replay "
                          "with round-mean metrics vs the solver oracle")
@@ -187,6 +238,10 @@ def main():
                           seed=args.seed, quiet=args.quiet,
                           guard=args.guard, tick_ms=args.tick_ms,
                           queue_cap=args.queue_cap, epochs=args.epochs,
+                          telemetry=args.telemetry,
+                          window_ms=args.window_ms,
+                          trace_out=args.trace_out,
+                          trace_sample=args.trace_sample,
                           round_replay=args.round_replay)
     if args.out:
         report.pop("records", None)  # raw numpy arrays, not JSON

@@ -18,14 +18,14 @@ from repro.serve.stream import (RequestStream, poisson_request_stream,
                                 round_synchronous_stream)
 from repro.serve.engine import (EngineState, RequestRecords, ServeConfig,
                                 ServeEngine, make_serve_engine,
-                                serve_stream)
+                                serve_stream, telemetry_report)
 from repro.serve.metrics import request_report
 from repro.serve.compat import make_gateway, replay_trace
 
 __all__ = [
     "RequestStream", "poisson_request_stream", "round_synchronous_stream",
     "EngineState", "RequestRecords", "ServeConfig", "ServeEngine",
-    "make_serve_engine", "serve_stream",
+    "make_serve_engine", "serve_stream", "telemetry_report",
     "request_report",
     "make_gateway", "replay_trace",
 ]

@@ -28,6 +28,13 @@ epoch boundaries and refreshes scenario-borne policy params between
 chunks (``on_epoch`` is the bundle hot-swap point), then reduces the
 per-request records with ``repro.serve.metrics``.
 
+With ``ServeConfig.telemetry`` on, a ``repro.telemetry.MetricBuffer``
+rides in the scan carry: per-``window_ms`` counters (admits, drops,
+served, violations, SLO attainment, decisions), window-end gauges
+(backlog, queue depth, in-flight rounds, per-tier occupancy), and a
+log-spaced end-to-end-latency histogram all accumulate on device — the
+host sees them once, after the run, via ``telemetry_report``.
+
 Run on a ``round_synchronous_stream`` (all arrivals on round boundaries,
 counts ≤ n_max), the engine degenerates to exactly the round-replay
 gateway's behavior — the parity tests enforce ART/violation agreement
@@ -43,12 +50,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.fleet import latency
 from repro.fleet.env import FleetConfig, FleetState, make_fleet_env
 from repro.fleet.workload import FleetScenario
 from repro.policy.api import (Policy, act_batch, refresh_params,
                               require_jittable)
 from repro.serve.metrics import request_report
 from repro.serve.stream import RequestStream
+from repro.telemetry.metrics import (MetricBuffer, buffer_series,
+                                     count_event, metrics_init,
+                                     observe_values, set_gauge, window_of)
+
+# per-window counters and gauges the engine's telemetry records; counters
+# scatter-add per tick, gauges keep the last (= window-end) snapshot
+TEL_COUNTERS = ("admitted", "dropped", "served", "violated", "attained",
+                "decisions")
+TEL_GAUGES = ("backlog", "queue_depth", "inflight",
+              "occ_local", "occ_edge", "occ_cloud")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +84,13 @@ class ServeConfig:
     quiet: bool = False
     shared_cloud: bool = False
     shared_edge: bool = False
+    # telemetry: per-window metric series (queue depth, backlog, per-tier
+    # occupancy, admits/drops, attainment) + a log-spaced latency
+    # histogram, accumulated on device inside the tick scan.  Off by
+    # default — the telemetry-off engine compiles to the same program as
+    # before the feature existed.
+    telemetry: bool = False
+    window_ms: float = 1000.0
 
     @property
     def round_ms(self) -> float:
@@ -87,6 +112,8 @@ class RequestRecords(NamedTuple):
     served: jnp.ndarray      # bool — round completed within the horizon
     dropped: jnp.ndarray     # bool — rejected on queue overflow
     violated: jnp.ndarray    # bool — its round violated the accuracy SLO
+    action: jnp.ndarray      # int32 — the tier/model chosen for its slot
+    #                          (-1 until served); feeds the request trace
 
 
 class EngineState(NamedTuple):
@@ -99,6 +126,7 @@ class EngineState(NamedTuple):
     cur_ids: jnp.ndarray      # (C, n_max) int32 — ids in the round's slots
     round_start: jnp.ndarray  # (C,) float32
     rec: RequestRecords
+    tel: Optional[MetricBuffer] = None  # per-window metrics (None = off)
 
 
 class ServeEngine(NamedTuple):
@@ -116,11 +144,15 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig) -> ServeEngine:
     n_max, Q = cfg.n_max, cfg.queue_cap
     slot = jnp.arange(n_max)
 
-    def init(key, scenario: FleetScenario, n_requests: int) -> EngineState:
+    def init(key, scenario: FleetScenario, n_requests: int,
+             n_windows: int = 1) -> EngineState:
         C = scenario.n_cells
         k_env, key = jax.random.split(key)
-        zf = jnp.zeros((n_requests + 1,), jnp.float32)
-        zb = jnp.zeros((n_requests + 1,), bool)
+        # distinct buffers per field: the donated epoch step may not
+        # receive the same buffer aliased across record arrays
+        zf = lambda: jnp.zeros((n_requests + 1,), jnp.float32)
+        zb = lambda: jnp.zeros((n_requests + 1,), bool)
+        zi = jnp.full((n_requests + 1,), -1, jnp.int32)
         return EngineState(
             env=env.init(k_env, scenario),
             key=key,
@@ -130,10 +162,13 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig) -> ServeEngine:
             cur_n=jnp.zeros((C,), jnp.int32),
             cur_ids=jnp.full((C, n_max), -1, jnp.int32),
             round_start=jnp.zeros((C,), jnp.float32),
-            rec=RequestRecords(zf, zf, zf, zb, zb, zb))
+            rec=RequestRecords(zf(), zf(), zf(), zb(), zb(), zb(), zi),
+            tel=(metrics_init(n_windows, TEL_COUNTERS, TEL_GAUGES)
+                 if cfg.telemetry else None))
 
     def run_epoch(params, scenario: FleetScenario, state: EngineState,
-                  tick_ids, tick_now, tick_live, stream_t, stream_cell):
+                  tick_ids, tick_now, tick_live, stream_t, stream_cell,
+                  stream_slo):
         """One epoch = a jitted scan over its ticks.  ``tick_ids`` is
         (T_e, A) int32 — the ids arriving at each tick, -1-padded to the
         trace's max per-tick burst; ``tick_now`` (T_e,) float32 is each
@@ -150,7 +185,7 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig) -> ServeEngine:
 
             # -- 1. admit this tick's arrivals into the per-cell rings --
             def admit(i, acc):
-                q_ids, q_len, dropped = acc
+                q_ids, q_len, dropped, n_adm, n_drop = acc
                 rid = ids[i]
                 valid = rid >= 0
                 c = jnp.where(valid, stream_cell[jnp.maximum(rid, 0)], 0)
@@ -162,11 +197,14 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig) -> ServeEngine:
                 q_len = q_len.at[c].add(ok.astype(jnp.int32))
                 dropped = dropped.at[
                     jnp.where(valid & ~room, rid, scratch)].set(True)
-                return q_ids, q_len, dropped
+                return (q_ids, q_len, dropped,
+                        n_adm + ok.astype(jnp.int32),
+                        n_drop + (valid & ~room).astype(jnp.int32))
 
-            q_ids, q_len, dropped = jax.lax.fori_loop(
+            q_ids, q_len, dropped, n_adm, n_drop = jax.lax.fori_loop(
                 0, ids.shape[0], admit,
-                (st.q_ids, st.q_len, st.rec.dropped))
+                (st.q_ids, st.q_len, st.rec.dropped,
+                 jnp.int32(0), jnp.int32(0)))
 
             # -- 2. form rounds at idle cells with backlog --
             start = (st.cur_n == 0) & (q_len > 0)
@@ -199,10 +237,10 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig) -> ServeEngine:
             rec_mask = fin[:, None] & (slot[None, :] < cur_n[:, None])
             rid = jnp.where(rec_mask, cur_ids, scratch)
             flat = rid.reshape(-1)
+            wait_lanes = round_start[:, None] - stream_t[rid]
             rec = st.rec._replace(dropped=dropped)
             rec = rec._replace(
-                wait_ms=rec.wait_ms.at[flat].set(
-                    (round_start[:, None] - stream_t[rid]).reshape(-1)),
+                wait_ms=rec.wait_ms.at[flat].set(wait_lanes.reshape(-1)),
                 service_ms=rec.service_ms.at[flat].set(
                     info["times"].reshape(-1)),
                 art_ms=rec.art_ms.at[flat].set(
@@ -211,13 +249,49 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig) -> ServeEngine:
                 served=rec.served.at[flat].set(True),
                 violated=rec.violated.at[flat].set(
                     jnp.broadcast_to(info["violated"][:, None],
-                                     rid.shape).reshape(-1)))
+                                     rid.shape).reshape(-1)),
+                action=rec.action.at[flat].set(
+                    info["actions"].reshape(-1)))
+
+            n_decisions = active.sum().astype(jnp.int32)
+            tel = st.tel
+            if cfg.telemetry:
+                # -- 5. per-window device accumulators (no host sync) --
+                w = window_of(tel, now, cfg.window_ms)
+                e2e = wait_lanes + info["times"]
+                attained = rec_mask & (e2e <= stream_slo[rid] + 1e-6)
+                for name, n in (
+                        ("admitted", n_adm), ("dropped", n_drop),
+                        ("decisions", n_decisions),
+                        ("served", rec_mask.sum()),
+                        ("violated", (rec_mask
+                                      & info["violated"][:, None]).sum()),
+                        ("attained", attained.sum())):
+                    tel = count_event(tel, name, w, n)
+                tel = observe_values(tel, e2e, rec_mask)
+                # window-end snapshots of queue/round/tier occupancy;
+                # tiers count this tick's committed slots of active rounds
+                in_round = active[:, None] & (slot[None, :] < cur_n[:, None])
+                acts = info["actions"]
+                decided = in_round & (acts >= 0)
+                for name, g in (
+                        ("backlog", q_len.sum()),
+                        ("queue_depth", q_len.mean()),
+                        ("inflight", jnp.where(active, cur_n, 0).sum()),
+                        ("occ_local", (decided
+                                       & (acts < latency.N_MODELS)).sum()),
+                        ("occ_edge", (decided
+                                      & (acts == latency.A_EDGE)).sum()),
+                        ("occ_cloud", (decided
+                                       & (acts == latency.A_CLOUD)).sum())):
+                    tel = set_gauge(tel, name, w, g)
 
             st2 = EngineState(
                 env=env2, key=key, q_ids=q_ids, q_head=q_head,
                 q_len=q_len, cur_n=jnp.where(fin, 0, cur_n),
-                cur_ids=cur_ids, round_start=round_start, rec=rec)
-            return st2, active.sum().astype(jnp.int32)
+                cur_ids=cur_ids, round_start=round_start, rec=rec,
+                tel=tel)
+            return st2, n_decisions
 
         def tick(st, xs):
             ids, now, live = xs
@@ -231,7 +305,12 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig) -> ServeEngine:
             tick, state, (tick_ids, tick_now, tick_live))
         return state, n_act.sum()
 
-    return ServeEngine(init=init, run_epoch=jax.jit(run_epoch), cfg=cfg)
+    # the engine state (queues, records, telemetry accumulators) is
+    # donated: each epoch's buffers are reused in place on backends that
+    # support donation instead of being copied every chunk
+    return ServeEngine(init=init,
+                       run_epoch=jax.jit(run_epoch, donate_argnums=(2,)),
+                       cfg=cfg)
 
 
 def _tick_buckets(stream: RequestStream, tick_ms: float,
@@ -295,13 +374,18 @@ def serve_stream(policy: Policy, params, scenario: FleetScenario,
     ids, now, live, n_epochs = _tick_buckets(stream, cfg.tick_ms,
                                              ticks_per_epoch)
     N = stream.n_requests
+    n_ticks = int(live.sum())
     stream_t = jnp.asarray(np.append(stream.t_ms, 0.0), jnp.float32)
     stream_cell = jnp.asarray(np.append(stream.cell, 0), jnp.int32)
+    stream_slo = jnp.asarray(np.append(stream.slo_ms, 0.0), jnp.float32)
 
+    # windows cover the live serving ticks: the last live tick's wall
+    # clock decides the count, epoch padding can never add a window
+    n_windows = int((n_ticks - 1) * cfg.tick_ms // cfg.window_ms) + 1
     k_init, key = jax.random.split(key)
-    state = engine.init(k_init, scenario, N)
+    state = engine.init(k_init, scenario, N, n_windows)
     params_t = params
-    wall, lanes, active = 0.0, 0, 0
+    wall, compile_wall, lanes, active = 0.0, 0.0, 0, 0
     for e in range(n_epochs):
         params_t = (refresh_params(policy, params, scenario)
                     if on_epoch is None else on_epoch(e, params_t))
@@ -310,12 +394,14 @@ def serve_stream(policy: Policy, params, scenario: FleetScenario,
         state, n_act = jax.block_until_ready(engine.run_epoch(
             params_t, scenario, state, jnp.asarray(ids[lo:hi]),
             jnp.asarray(now[lo:hi]), jnp.asarray(live[lo:hi]),
-            stream_t, stream_cell))
+            stream_t, stream_cell, stream_slo))
         dt = time.perf_counter() - t0
         if e > 0:  # epoch 0 pays the XLA compile
             wall += dt
             lanes += scenario.n_cells * int(live[lo:hi].sum())
             active += int(n_act)
+        else:
+            compile_wall = dt
         if verbose:
             done = int(np.asarray(state.rec.served)[:N].sum())
             print(f"  epoch {e:3d}: ticks [{lo}, {hi}), "
@@ -326,12 +412,43 @@ def serve_stream(policy: Policy, params, scenario: FleetScenario,
                state.rec._asdict().items()}
     report = request_report(stream, records)
     report["n_epochs"] = n_epochs
-    report["n_ticks"] = int(live.sum())
+    report["n_ticks"] = n_ticks
     report["tick_ms"] = cfg.tick_ms
+    # wall-clock split: epoch 0 carries the XLA compile (+ its ticks),
+    # the rest is steady-state execution
+    report["compile_time_s"] = compile_wall
+    report["run_time_s"] = wall
     # None when there is no steady-state window (single epoch)
     report["decisions_per_s"] = (lanes / wall
                                  if lanes and wall > 0 else None)
     report["active_decisions_per_s"] = (active / wall
                                         if active and wall > 0 else None)
     report["records"] = records
+    if cfg.telemetry:
+        report["telemetry"] = telemetry_report(state.tel, cfg.window_ms)
     return report
+
+
+def telemetry_report(tel: MetricBuffer, window_ms: float) -> dict:
+    """Host-side, JSON-safe view of the engine's metric buffer: per-window
+    series (counts, window-end gauges, derived attainment) plus the
+    latency histogram and its p50/p95/p99."""
+    s = buffer_series(tel)
+    served = s["counters"]["served"].astype(np.float64)
+    attained = s["counters"]["attained"].astype(np.float64)
+    attainment = [None if n == 0 else float(a / n)
+                  for a, n in zip(attained, served)]
+    series = {n: v.tolist() for n, v in s["counters"].items()}
+    series.update({n: [None if np.isnan(x) else float(x) for x in v]
+                   for n, v in s["gauges"].items()})
+    series["attainment"] = attainment
+    return {
+        "window_ms": window_ms,
+        "n_windows": tel.n_windows,
+        "series": series,
+        "latency_hist": s["hist"].tolist(),
+        "latency_hist_edges_ms": np.round(s["edges"], 4).tolist(),
+        "hist_p50_latency_ms": s["hist_percentiles"]["p50"],
+        "hist_p95_latency_ms": s["hist_percentiles"]["p95"],
+        "hist_p99_latency_ms": s["hist_percentiles"]["p99"],
+    }

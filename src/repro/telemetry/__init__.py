@@ -1,0 +1,33 @@
+"""Unified observability for serving and training.
+
+    metrics    jit-native MetricBuffer pytree: per-window counters and
+               gauges plus a log-spaced latency histogram, threaded
+               through the serve engine's tick scan and the hltrain
+               session scan as device accumulators — no host syncs
+               inside jit
+    trace      sampled per-request lifecycle traces (arrival → admit /
+               drop → round start → completion) as JSONL, with a
+               round-trip validator CI runs on every smoke trace
+    report     CLI that renders a served run from a trace file:
+               windowed time-series table + tail-latency breakdown by
+               cell and by action (``python -m repro.telemetry.report``)
+    profiling  ``profiled()`` context wrapper: compile-vs-run wall-clock
+               split, peak memory, optional ``jax.profiler`` trace dir
+               (``REPRO_PROFILE_DIR``) — the benchmarks report through it
+"""
+from repro.telemetry.metrics import (MetricBuffer, metrics_init,
+                                     count_event, set_gauge,
+                                     observe_values, buffer_series,
+                                     histogram_percentile,
+                                     histogram_percentiles)
+from repro.telemetry.trace import (build_trace, write_trace, read_trace,
+                                   validate_trace)
+from repro.telemetry.profiling import Profile, profiled
+
+__all__ = [
+    "MetricBuffer", "metrics_init", "count_event", "set_gauge",
+    "observe_values", "buffer_series", "histogram_percentile",
+    "histogram_percentiles",
+    "build_trace", "write_trace", "read_trace", "validate_trace",
+    "Profile", "profiled",
+]

@@ -1,0 +1,144 @@
+"""Render a served run's JSONL lifecycle trace as a human summary.
+
+    PYTHONPATH=src python -m repro.telemetry.report trace.jsonl \
+        [--window-ms 1000] [--top 8]
+
+Validates the trace first (``validate_trace`` — unique request ids,
+known statuses, monotone lifecycle timestamps), then prints
+
+* a windowed time-series table (arrivals / served / dropped / attainment
+  / p95 latency per ``--window-ms`` window of arrival time),
+* a tail-latency breakdown by cell (the ``--top`` worst cells by p99),
+* a tail-latency breakdown by chosen action (local / edge / cloud tier).
+
+Reads nothing but the trace file, so it can be pointed at any JSONL
+written by ``serve_fleet --trace-out`` — including traces from other
+machines or CI artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.fleet import latency
+from repro.telemetry.trace import read_trace, validate_trace
+
+
+def _pct(xs, p):
+    return float(np.percentile(np.asarray(xs, np.float64), p)) if len(xs) \
+        else None
+
+
+def _fmt(v, nd=1):
+    return "-" if v is None else f"{v:.{nd}f}"
+
+
+def _latency(ev):
+    return ev["wait_ms"] + ev["service_ms"]
+
+
+def windowed_series(events: list[dict], window_ms: float) -> list[dict]:
+    """Per-arrival-window counts and tails, one dict per window."""
+    t0 = min(ev["t_arrival_ms"] for ev in events)
+    rows = {}
+    for ev in events:
+        w = int((ev["t_arrival_ms"] - t0) // window_ms)
+        r = rows.setdefault(w, dict(window=w, arrivals=0, served=0,
+                                    dropped=0, deferred=0, attained=0,
+                                    lat=[]))
+        r["arrivals"] += 1
+        r[ev["status"]] += 1
+        if ev["status"] == "served":
+            r["attained"] += bool(ev["attained"])
+            r["lat"].append(_latency(ev))
+    out = []
+    for w in sorted(rows):
+        r = rows[w]
+        out.append(dict(window=w, arrivals=r["arrivals"],
+                        served=r["served"], dropped=r["dropped"],
+                        deferred=r["deferred"],
+                        attainment=(r["attained"] / r["served"]
+                                    if r["served"] else None),
+                        p50_ms=_pct(r["lat"], 50),
+                        p95_ms=_pct(r["lat"], 95)))
+    return out
+
+
+def breakdown(events: list[dict], key) -> list[dict]:
+    """Tail-latency breakdown of served events grouped by ``key(ev)``."""
+    groups = {}
+    for ev in events:
+        if ev["status"] != "served":
+            continue
+        groups.setdefault(key(ev), []).append(_latency(ev))
+    out = []
+    for g in sorted(groups):
+        lat = groups[g]
+        out.append(dict(group=g, served=len(lat),
+                        p50_ms=_pct(lat, 50), p95_ms=_pct(lat, 95),
+                        p99_ms=_pct(lat, 99)))
+    return out
+
+
+def action_tier(ev) -> str:
+    """Execution tier of a round action: the first ``latency.N_MODELS``
+    actions run the model locally, then one edge and one cloud action."""
+    a = ev["action"]
+    if a is None:
+        return "?"
+    if a < latency.N_MODELS:
+        return "local"
+    return "edge" if a == latency.A_EDGE else "cloud"
+
+
+def render(path: str, *, window_ms: float = 1000.0, top: int = 8) -> str:
+    events = read_trace(path)
+    summary = validate_trace(events)
+    lines = [f"trace {path}: {summary['n_events']} events "
+             f"({summary['served']} served, {summary['dropped']} dropped, "
+             f"{summary['deferred']} deferred)", ""]
+
+    lines.append(f"time series ({window_ms:g} ms windows of arrival time)")
+    lines.append("  win  arrivals  served  dropped  attain   p50ms   p95ms")
+    for r in windowed_series(events, window_ms):
+        att = "-" if r["attainment"] is None else f"{r['attainment']:.0%}"
+        lines.append(f"  {r['window']:3d}  {r['arrivals']:8d}  "
+                     f"{r['served']:6d}  {r['dropped']:7d}  {att:>6}  "
+                     f"{_fmt(r['p50_ms']):>6}  {_fmt(r['p95_ms']):>6}")
+
+    served = [ev for ev in events if ev["status"] == "served"]
+    if served:
+        lines.append("")
+        lines.append("tail latency by action tier")
+        lines.append("  tier    served   p50ms   p95ms   p99ms")
+        for r in breakdown(served, action_tier):
+            lines.append(f"  {r['group']:<6}  {r['served']:6d}  "
+                         f"{_fmt(r['p50_ms']):>6}  {_fmt(r['p95_ms']):>6}  "
+                         f"{_fmt(r['p99_ms']):>6}")
+
+        by_cell = breakdown(served, lambda ev: ev["cell"])
+        by_cell.sort(key=lambda r: -(r["p99_ms"] or 0.0))
+        lines.append("")
+        lines.append(f"worst {min(top, len(by_cell))} cells by p99 latency"
+                     f" (of {len(by_cell)})")
+        lines.append("  cell    served   p50ms   p95ms   p99ms")
+        for r in by_cell[:top]:
+            lines.append(f"  {r['group']:<6}  {r['served']:6d}  "
+                         f"{_fmt(r['p50_ms']):>6}  {_fmt(r['p95_ms']):>6}  "
+                         f"{_fmt(r['p99_ms']):>6}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="JSONL trace from serve_fleet --trace-out")
+    ap.add_argument("--window-ms", type=float, default=1000.0)
+    ap.add_argument("--top", type=int, default=8,
+                    help="worst-cells table length")
+    args = ap.parse_args()
+    print(render(args.trace, window_ms=args.window_ms, top=args.top))
+
+
+if __name__ == "__main__":
+    main()
