@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import history
 from repro.core.networks import init_mlp_net
 from repro.env import latency_model as lm
 from repro.env.edge_cloud import EdgeCloudEnv, EnvConfig
@@ -57,7 +58,9 @@ def bench_python_env(n_steps: int = 2000) -> float:
 
 def main(n_cells: int = 1000, n_steps: int = 200, n_max: int = 5,
          params_path: str | None = None,
-         out: str = "BENCH_fleet.json") -> dict:
+         out: str = "BENCH_fleet.json",
+         check_regression: bool = False,
+         history_path: str = history.DEFAULT_PATH) -> dict:
     cfg = FleetConfig(n_max=n_max)
     scn = random_fleet(jax.random.PRNGKey(1), n_cells, n_max=n_max)
     params = load_params(params_path, cfg.state_dim)
@@ -112,6 +115,8 @@ def main(n_cells: int = 1000, n_steps: int = 200, n_max: int = 5,
     print(f"CSV,fleet_throughput,{elapsed / decisions * 1e6:.2f},"
           f"decisions_per_s={fleet_rate:.0f}")
     print(f"wrote {out}")
+    history.record("fleet", result, path=history_path,
+                   check=check_regression)
     return result
 
 
@@ -122,5 +127,11 @@ if __name__ == "__main__":
     p.add_argument("--n-max", type=int, default=5)
     p.add_argument("--params", default=None)
     p.add_argument("--out", default="BENCH_fleet.json")
+    p.add_argument("--check-regression", action="store_true",
+                   help="fail if a tier-1 figure degrades beyond "
+                        "tolerance vs the bench-history median")
+    p.add_argument("--history", default=history.DEFAULT_PATH,
+                   help="bench-history ledger (JSONL)")
     a = p.parse_args()
-    main(a.cells, a.steps, a.n_max, a.params, a.out)
+    main(a.cells, a.steps, a.n_max, a.params, a.out,
+         check_regression=a.check_regression, history_path=a.history)

@@ -1,0 +1,233 @@
+"""Bench-history ledger + tier-1 regression gate.
+
+    PYTHONPATH=src python -m benchmarks.history --show [--bench serve]
+    PYTHONPATH=src python -m benchmarks.history --check BENCH_serve.json
+    PYTHONPATH=src python -m benchmarks.history --append BENCH_serve.json
+
+Every benchmark run appends its full result JSON — stamped with the git
+SHA and a UTC timestamp — as one line of ``results/bench_history.jsonl``.
+That file is the repo's performance memory: ``--check-regression`` on any
+benchmark (or ``--check`` here, against an already-written
+``BENCH_*.json``) compares the candidate's tier-1 figures against the
+**median of the prior recorded runs** of the same benchmark at the same
+scale (smoke vs full), and fails when any figure degrades beyond its
+tolerance.  The check runs *before* the append, so a regressing run
+never pollutes the median it is judged against.
+
+Tier-1 figures and tolerances (``TIER1``): throughput figures
+(decisions/s, steps/s) are machine-dependent, so their tolerance is
+loose — they gate order-of-magnitude cliffs (a de-jitted scan, an
+accidental host sync), not CI-runner noise.  Behavior figures (greedy
+p99 latency, greedy SLO attainment) are deterministic given the seeds,
+so their tolerances are tight.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import subprocess
+import time
+
+DEFAULT_PATH = "results/bench_history.jsonl"
+
+# bench -> [(dotted metric path, direction, relative tolerance)].
+# direction "higher" fails when candidate < median * (1 - tol);
+# "lower" fails when candidate > median * (1 + tol).
+TIER1 = {
+    "fleet": [
+        ("decisions_per_s", "higher", 0.9),
+    ],
+    "hltrain": [
+        ("fleet_hl.steps_per_s", "higher", 0.9),
+    ],
+    "serve": [
+        ("request_decisions_per_s", "higher", 0.9),
+        ("policies.greedy.p99_latency_ms", "lower", 0.25),
+        ("policies.greedy.slo_attainment", "higher", 0.10),
+    ],
+}
+
+
+def lookup(d: dict, dotted: str):
+    """``lookup(r, "policies.greedy.p99_latency_ms")`` — None when any
+    segment is missing."""
+    for part in dotted.split("."):
+        if not isinstance(d, dict) or part not in d:
+            return None
+        d = d[part]
+    return d
+
+
+def git_sha() -> str | None:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, check=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except (OSError, subprocess.CalledProcessError):
+        return None
+
+
+def load_history(path: str = DEFAULT_PATH, *, bench: str | None = None,
+                 smoke: bool | None = None) -> list[dict]:
+    """Entries from the ledger, optionally filtered to one benchmark at
+    one scale (smoke runs are never compared against full runs)."""
+    if not os.path.exists(path):
+        return []
+    entries = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            e = json.loads(line)
+            if bench is not None and e.get("bench") != bench:
+                continue
+            if smoke is not None and bool(
+                    e.get("result", {}).get("smoke", False)) != smoke:
+                continue
+            entries.append(e)
+    return entries
+
+
+def append_entry(bench: str, result: dict,
+                 path: str = DEFAULT_PATH) -> dict:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    entry = {"bench": bench, "git_sha": git_sha(),
+             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                        time.gmtime()),
+             "result": result}
+    with open(path, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+    return entry
+
+
+def _median(vals: list[float]) -> float:
+    s = sorted(vals)
+    n = len(s)
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+def check_regression(bench: str, result: dict, history: list[dict],
+                     tier1: dict = TIER1) -> dict:
+    """Candidate vs the median of prior recorded runs, per tier-1 metric.
+
+    A metric with no prior recordings (or absent from the candidate) is
+    skipped, not failed — the first recorded run always passes and
+    becomes the baseline."""
+    checks = []
+    for metric, direction, tol in tier1.get(bench, []):
+        cand = lookup(result, metric)
+        prior = [v for e in history
+                 for v in [lookup(e.get("result", {}), metric)]
+                 if isinstance(v, (int, float))]
+        if not isinstance(cand, (int, float)) or not prior:
+            checks.append({"metric": metric, "ok": True, "skipped": True,
+                           "candidate": cand, "n_prior": len(prior)})
+            continue
+        med = _median(prior)
+        if direction == "higher":
+            bound = med * (1.0 - tol)
+            ok = cand >= bound
+        else:
+            bound = med * (1.0 + tol)
+            ok = cand <= bound
+        checks.append({"metric": metric, "ok": bool(ok),
+                       "skipped": False, "direction": direction,
+                       "tolerance": tol, "candidate": cand,
+                       "median": med, "bound": bound,
+                       "n_prior": len(prior)})
+    return {"bench": bench, "ok": all(c["ok"] for c in checks),
+            "checks": checks}
+
+
+def render_verdict(verdict: dict) -> str:
+    lines = [f"tier-1 regression check ({verdict['bench']}):"]
+    for c in verdict["checks"]:
+        if c["skipped"]:
+            lines.append(f"  skip  {c['metric']:40s} "
+                         f"(no prior history)")
+            continue
+        arrow = "≥" if c["direction"] == "higher" else "≤"
+        lines.append(
+            f"  {'ok' if c['ok'] else 'FAIL':4s}  {c['metric']:40s} "
+            f"{c['candidate']:.4g} {arrow} {c['bound']:.4g} "
+            f"(median {c['median']:.4g} of {c['n_prior']}, "
+            f"tol {c['tolerance']:.0%})")
+    return "\n".join(lines)
+
+
+def record(bench: str, result: dict, *, path: str = DEFAULT_PATH,
+           check: bool = False) -> dict | None:
+    """Benchmark post-run hook: regression-check the result against the
+    ledger (when ``check``), then append it.  Check-before-append keeps
+    a regressing candidate out of its own comparison median; the caller
+    has already written its ``BENCH_*.json``, so a failing exit still
+    leaves the figures on disk."""
+    verdict = None
+    if check:
+        prior = load_history(path, bench=bench,
+                             smoke=bool(result.get("smoke", False)))
+        verdict = check_regression(bench, result, prior)
+        print(render_verdict(verdict))
+    entry = append_entry(bench, result, path=path)
+    print(f"bench history: appended {bench} run "
+          f"(sha {entry['git_sha'] or 'unknown'}) to {path}")
+    if check and not verdict["ok"]:
+        bad = ", ".join(c["metric"] for c in verdict["checks"]
+                        if not c["ok"])
+        raise SystemExit(f"tier-1 bench regression in {bench}: {bad}")
+    return verdict
+
+
+def _infer_bench(path: str) -> str:
+    m = re.search(r"BENCH_([a-z0-9]+)\.json$", os.path.basename(path))
+    if not m or m.group(1) not in TIER1:
+        raise SystemExit(
+            f"cannot infer benchmark from {path!r}; expected "
+            f"BENCH_<name>.json with name in {sorted(TIER1)}")
+    return m.group(1)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="bench-history ledger: show, append, or "
+                    "regression-check benchmark results")
+    g = ap.add_mutually_exclusive_group(required=True)
+    g.add_argument("--show", action="store_true",
+                   help="list recorded entries")
+    g.add_argument("--append", metavar="BENCH_X.json",
+                   help="append a result JSON to the ledger")
+    g.add_argument("--check", metavar="BENCH_X.json",
+                   help="regression-check a result JSON against the "
+                        "ledger (then append it)")
+    ap.add_argument("--bench", default=None,
+                    help="filter --show to one benchmark")
+    ap.add_argument("--path", default=DEFAULT_PATH)
+    args = ap.parse_args(argv)
+
+    if args.show:
+        for e in load_history(args.path, bench=args.bench):
+            r = e.get("result", {})
+            figs = " ".join(
+                f"{m}={lookup(r, m):.4g}" for m, _, _ in
+                TIER1.get(e["bench"], [])
+                if isinstance(lookup(r, m), (int, float)))
+            print(f"{e['timestamp']}  {e['bench']:8s} "
+                  f"{e['git_sha'] or '-':8s} "
+                  f"{'smoke' if r.get('smoke') else 'full ':5s} {figs}")
+        return 0
+
+    src = args.append or args.check
+    with open(src) as f:
+        result = json.load(f)
+    record(_infer_bench(src), result, path=args.path,
+           check=args.check is not None)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -42,6 +42,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import dataclasses
+
+from benchmarks import history
 from repro.core.agent import HLAgent, HLHyperParams, ConvergenceTracker
 from repro.env.edge_cloud import EdgeCloudEnv, EnvConfig, REWARD_SCALE
 from repro.env.scenarios import SCENARIOS, CONSTRAINTS
@@ -50,8 +53,8 @@ from repro.fleet import FleetConfig, from_table4, random_fleet, \
 from repro.fleet.workload import FleetScenario
 from repro.hltrain import (FleetHLParams, make_hl_trainer,
                            evaluate_vs_solver, optimal_rewards,
-                           run_curriculum)
-from repro.telemetry import profiled
+                           run_curriculum, train_telemetry_report)
+from repro.telemetry import audit_train_report, profiled
 
 CONV_SCENARIO, CONV_CONSTRAINT = "B", "85%"  # the n=5 convergence target
 GEN_N_MAX = 32  # held-out generalization fleet size (ROADMAP item)
@@ -203,8 +206,29 @@ def bench_generalization(hp: FleetHLParams, n_cells: int, chunk: int,
     return rows
 
 
+def audit_training_telemetry(hp: FleetHLParams) -> dict:
+    """Post-run invariant audit: a tiny telemetry-enabled training run
+    whose per-session metric windows must reconcile with the trainer's
+    own counters (Σ direct-step windows == direct-step total, ε gauge
+    non-increasing, every session's gauges written)."""
+    tiny = dataclasses.replace(hp, epochs=2, telemetry=True)
+    scn = from_table4(names=(CONV_SCENARIO,),
+                      constraints=(CONV_CONSTRAINT,))
+    trainer = make_hl_trainer(FleetConfig(n_max=5), tiny)
+    state = trainer.init(jax.random.PRNGKey(0), scn)
+    state, _ = trainer.run(state, scn, 0, tiny.epochs)
+    rep = train_telemetry_report(state)
+    audit = audit_train_report(rep, direct_steps=int(state.direct_steps),
+                               sessions=int(state.sessions))
+    print(audit.render())
+    audit.raise_on_failure()
+    return audit.summary()
+
+
 def main(smoke: bool = False, cells: int = 320, conv_cells: int = 64,
-         gen_cells: int = 64, out: str = "BENCH_hltrain.json") -> dict:
+         gen_cells: int = 64, out: str = "BENCH_hltrain.json",
+         check_regression: bool = False,
+         history_path: str = history.DEFAULT_PATH) -> dict:
     if smoke:
         hp = FleetHLParams(epochs=4, n_direct=4, t_direct=5, n_world=8,
                            n_suggest=2, t_suggest=3, n_plan=8, batch=64,
@@ -258,8 +282,12 @@ def main(smoke: bool = False, cells: int = 320, conv_cells: int = 64,
     print(f"  constraint-conditioned 'full' beats 'base' on held-out "
           f"violations: {gen['full_beats_base']}")
 
+    print("— training-telemetry invariant audit —")
+    audit = audit_training_telemetry(hp)
+
     result = {
         "smoke": smoke,
+        "audit": audit,
         # profiled() split of the jitted-trainer throughput section
         "compile_time_s": fl["compile_time_s"],
         "run_time_s": fl["run_time_s"],
@@ -279,6 +307,8 @@ def main(smoke: bool = False, cells: int = 320, conv_cells: int = 64,
     print(f"CSV,hltrain_throughput,{1e6 / fl['steps_per_s']:.3f},"
           f"steps_per_s={fl['steps_per_s']:.0f}")
     print("wrote", out)
+    history.record("hltrain", result, path=history_path,
+                   check=check_regression)
     return result
 
 
@@ -292,5 +322,11 @@ if __name__ == "__main__":
     p.add_argument("--conv-cells", type=int, default=64)
     p.add_argument("--gen-cells", type=int, default=64)
     p.add_argument("--out", default="BENCH_hltrain.json")
+    p.add_argument("--check-regression", action="store_true",
+                   help="fail if a tier-1 figure degrades beyond "
+                        "tolerance vs the bench-history median")
+    p.add_argument("--history", default=history.DEFAULT_PATH,
+                   help="bench-history ledger (JSONL)")
     a = p.parse_args()
-    main(a.smoke, a.cells, a.conv_cells, a.gen_cells, a.out)
+    main(a.smoke, a.cells, a.conv_cells, a.gen_cells, a.out,
+         check_regression=a.check_regression, history_path=a.history)

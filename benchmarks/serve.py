@@ -33,11 +33,13 @@ minutes-scale CI job and marks the JSON ``smoke: true``.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 
 import jax
 
+from benchmarks import history
 from repro.fleet import FleetConfig, curriculum_fleets, random_fleet
 from repro.fleet.workload import poisson_round_trace
 from repro.hltrain import FleetHLParams, make_hl_trainer, run_curriculum
@@ -46,7 +48,7 @@ from repro.policy import (PolicyBundle, heuristic_greedy_policy,
                           load_bundle, policy_from_bundle, save_bundle,
                           solve_oracle)
 from repro.serve import ServeConfig, poisson_request_stream, serve_stream
-from repro.telemetry import profiled
+from repro.telemetry import (audit_serve_report, build_trace, profiled)
 
 N_MAX = 5
 OBS_SPEC = "full"
@@ -80,7 +82,9 @@ def save_greedy_bundle(path: str) -> None:
 
 def main(smoke: bool = False, cells: int = 64, rounds: int = 40,
          rate: float = 3.0, workdir: str = "results/serve",
-         out: str = "BENCH_serve.json") -> dict:
+         out: str = "BENCH_serve.json",
+         check_regression: bool = False,
+         history_path: str = history.DEFAULT_PATH) -> dict:
     if smoke:
         cells, rounds = min(cells, 32), min(rounds, 25)
         hp = FleetHLParams(epochs=8, n_direct=4, t_direct=6, n_world=8,
@@ -175,8 +179,23 @@ def main(smoke: bool = False, cells: int = 64, rounds: int = 40,
                   f"{req['violation_rate']:.1%}, "
                   f"{req['decisions_per_s'] or 0:,.0f} dec/s")
 
+    # post-run invariant audit: re-serve the greedy baseline with the
+    # telemetry buffer threaded through the tick scan and check the
+    # conservation laws (admits == serves + drops + still-queued, window
+    # sums == run totals, occupancy ≤ capacity) plus the lifecycle trace
+    # — a silent metrics bug fails the benchmark, not just a dashboard
+    tel_cfg = dataclasses.replace(scfg, telemetry=True)
+    req_tel = serve_stream(*served["greedy"], scenario, stream, tel_cfg,
+                           key=k_serve)
+    audit = audit_serve_report(
+        req_tel, trace=build_trace(stream, req_tel["records"], TICK_MS),
+        n_cells=cells, n_max=N_MAX, queue_cap=tel_cfg.queue_cap)
+    print(audit.render())
+    audit.raise_on_failure()
+
     result = {
         "smoke": smoke,
+        "audit": audit.summary(),
         "n_cells": cells, "n_rounds": rounds, "rate": rate,
         "n_max": N_MAX, "obs_spec": OBS_SPEC, "tick_ms": TICK_MS,
         "trace_stats": trace_stats,
@@ -197,6 +216,8 @@ def main(smoke: bool = False, cells: int = 64, rounds: int = 40,
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
     print("wrote", out)
+    history.record("serve", result, path=history_path,
+                   check=check_regression)
     return result
 
 
@@ -210,5 +231,11 @@ if __name__ == "__main__":
     p.add_argument("--workdir", default="results/serve",
                    help="where the trained bundles are written")
     p.add_argument("--out", default="BENCH_serve.json")
+    p.add_argument("--check-regression", action="store_true",
+                   help="fail if a tier-1 figure degrades beyond "
+                        "tolerance vs the bench-history median")
+    p.add_argument("--history", default=history.DEFAULT_PATH,
+                   help="bench-history ledger (JSONL)")
     a = p.parse_args()
-    main(a.smoke, a.cells, a.rounds, a.rate, a.workdir, a.out)
+    main(a.smoke, a.cells, a.rounds, a.rate, a.workdir, a.out,
+         check_regression=a.check_regression, history_path=a.history)

@@ -42,6 +42,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import io_callback
 
 from repro.core.dqn import make_dqn
 from repro.core.networks import apply_mlp_net
@@ -160,9 +161,18 @@ def session_schedule(hp: FleetHLParams) -> dict:
             "plan": count((alpha + 1) / 2, hp.n_plan)}
 
 
-def make_hl_trainer(cfg: FleetConfig, hp: FleetHLParams = None,
-                    ) -> FleetHLTrainer:
+def make_hl_trainer(cfg: FleetConfig, hp: FleetHLParams = None, *,
+                    live=None) -> FleetHLTrainer:
+    """``live`` is an optional ``repro.telemetry.TrainLiveEmitter``
+    (requires ``hp.telemetry``): the epoch scan fires one io_callback
+    per epoch with that epoch's per-direct-session metric lanes, so
+    epsilon / mean-reward / TD-loss stream out as NDJSON while the
+    jitted chunk runs instead of only after ``run`` returns."""
     hp = hp or FleetHLParams()
+    if live is not None and not hp.telemetry:
+        raise ValueError("live training export requires "
+                         "FleetHLParams.telemetry (the per-session "
+                         "gauges it streams)")
     env = make_fleet_env(cfg)
     # observation width/normalization comes from the spec, never hard-coded
     spec = cfg.spec()
@@ -342,9 +352,18 @@ def make_hl_trainer(cfg: FleetConfig, hp: FleetHLParams = None,
                                 lambda y: jnp.where(active, y, jnp.nan), ys))
                 return body
 
+            sessions0 = st.sessions  # global index of this epoch's first
+            #                          direct session (live export)
             st, (mean_r, q_loss) = jax.lax.scan(
                 masked(direct_session, n_direct_act), st,
                 jnp.arange(hp.n_direct))
+            if hp.telemetry and live is not None:
+                # one host callback per epoch: the per-session lanes of
+                # this epoch (inactive slots are NaN and dropped by the
+                # emitter's n_active bound)
+                io_callback(live.on_epoch, None, epoch_idx, n_direct_act,
+                            sessions0, mean_r, q_loss,
+                            epsilon(st).mean(), ordered=False)
             st, (sm_loss,) = jax.lax.scan(
                 masked(world_session, n_world_act), st,
                 jnp.arange(hp.n_world))

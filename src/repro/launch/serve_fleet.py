@@ -6,6 +6,8 @@
         [--tick-ms 50] [--queue-cap 64] [--epochs 5] \
         [--telemetry] [--window-ms 1000] \
         [--trace-out trace.jsonl] [--trace-sample 1.0] \
+        [--live] [--live-out live.ndjson] [--slo-target 0.9] \
+        [--canary other.bundle.msgpack] \
         [--round-replay] [--out serve.json]
 
 This module is a thin shell over ``repro.serve``: it loads a
@@ -35,6 +37,16 @@ per-request lifecycle trace as JSONL (``--trace-sample`` is the
 deterministic id-hash sampling rate) which
 ``python -m repro.telemetry.report`` renders into a run summary.
 
+Live ops: ``--live`` (requires ``--telemetry``) streams each closed
+telemetry window out of the running scan as NDJSON — to stdout, or to
+``--live-out live.ndjson`` — with multi-window SLO burn-rate ``alert``
+events inline (``--slo-target`` sets the attainment objective whose
+error budget the burn rate is measured against).  ``--canary
+other.bundle.msgpack`` serves a second bundle against the bit-identical
+arrival stream (same fleet, same stream, same serving key) and attaches
+a paired per-window diff — Δp99 / Δattainment / Δdrops plus sign-flip
+windows — under ``"canary"`` in the report.
+
 Every run echoes its resolved seed and config in the output header (and
 records them under ``"config"`` in the report), so any served run can be
 reproduced bit-exactly from its printout alone.
@@ -47,6 +59,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 
 import jax
 
@@ -57,10 +70,28 @@ from repro.policy.adapters import (heuristic_greedy_policy, slo_guarded,
 from repro.policy.api import Policy
 from repro.policy.bundle import load_bundle, policy_from_bundle
 from repro.serve import (ServeConfig, poisson_request_stream, serve_stream)
-from repro.telemetry import build_trace, write_trace
+from repro.serve.engine import TEL_COUNTERS, TEL_GAUGES
+from repro.telemetry import (BurnRateAlerter, BurnRateConfig, LiveEmitter,
+                             build_trace, canary_diff, open_sink,
+                             render_canary, write_trace)
 # compat re-exports: tests and benchmarks historically import the round
 # gateway from this module
 from repro.serve.compat import make_gateway, replay_trace  # noqa: F401
+
+
+def require_writable(path, flag: str) -> None:
+    """Fail fast on an output path whose parent directory doesn't exist
+    or isn't writable — *before* the expensive compile + serve, not
+    after.  ``None`` and ``"-"`` (stdout) always pass."""
+    if path is None or path == "-":
+        return
+    parent = os.path.dirname(os.path.abspath(path))
+    if not os.path.isdir(parent):
+        raise SystemExit(f"{flag} {path!r}: parent directory {parent!r} "
+                         "does not exist")
+    if not os.access(parent, os.W_OK):
+        raise SystemExit(f"{flag} {path!r}: parent directory {parent!r} "
+                         "is not writable")
 
 
 def guarded_bundle_policy(bundle, key) -> tuple[Policy, object]:
@@ -79,13 +110,30 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
                  queue_cap: int = 64, epochs: int = 5,
                  telemetry: bool = False, window_ms: float = 1000.0,
                  trace_out: str = None, trace_sample: float = 1.0,
+                 live: bool = False, live_out: str = None,
+                 slo_target: float = 0.9, canary: str = None,
                  round_replay: bool = False,
                  verbose: bool = True) -> dict:
     """Load a PolicyBundle, build a held-out random fleet at the bundle's
     (spec, n_max), and serve ``rounds`` round-durations' worth of Poisson
     traffic through it — request-level by default, round replay with
     ``round_replay=True``.  The returned request-level report carries the
-    raw per-request arrays under ``"records"`` (stripped before JSON)."""
+    raw per-request arrays under ``"records"`` (stripped before JSON).
+
+    ``live`` streams closed telemetry windows as NDJSON (to ``live_out``
+    or stdout) while the run executes; ``canary`` serves a second bundle
+    against the bit-identical stream and attaches the paired per-window
+    diff under ``"canary"``."""
+    # fail fast on bad output paths and flag combinations — before the
+    # bundle load and engine compile, not after
+    require_writable(trace_out, "--trace-out")
+    require_writable(live_out, "--live-out")
+    if live and not telemetry:
+        raise SystemExit("--live streams the telemetry windows; "
+                         "add --telemetry")
+    if round_replay and canary:
+        raise SystemExit("--canary is a request-level feature; drop "
+                         "--round-replay to use it")
     bundle = load_bundle(bundle_path)
     meta = bundle.meta
     k_fleet, k_trace, k_serve, k_guard = jax.random.split(
@@ -107,6 +155,8 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
                   tick_ms=tick_ms, queue_cap=queue_cap, epochs=epochs,
                   telemetry=telemetry, window_ms=window_ms,
                   trace_sample=trace_sample, round_replay=round_replay,
+                  live=live, live_out=live_out, slo_target=slo_target,
+                  canary=canary,
                   obs_spec=bundle.obs_spec, n_max=bundle.n_max,
                   **couplings)
     if verbose:
@@ -158,9 +208,30 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
             k_trace, scenario, horizon_ms, rate=rate,
             round_ms=cfg.round_ms,
             epoch_ms=horizon_ms / max(1, epochs))
+        emitter = None
+        if live:
+            emitter = LiveEmitter(
+                open_sink(live_out), TEL_COUNTERS, TEL_GAUGES,
+                window_ms=window_ms,
+                alerter=BurnRateAlerter(BurnRateConfig(target=slo_target)))
         report = serve_stream(policy, params, scenario, stream, cfg,
-                              key=k_serve, verbose=verbose)
+                              key=k_serve, verbose=verbose, live=emitter)
         report["horizon_ms"] = horizon_ms
+        if canary:
+            c_bundle = load_bundle(canary, expect_spec=bundle.obs_spec,
+                                   expect_n_max=bundle.n_max)
+            if guard:
+                c_policy, c_params = guarded_bundle_policy(c_bundle,
+                                                           k_guard)
+            else:
+                c_policy, c_params = policy_from_bundle(c_bundle)
+            c_report = serve_stream(c_policy, c_params, scenario, stream,
+                                    cfg, key=k_serve, verbose=False)
+            report["canary"] = dict(
+                canary_diff(stream, report, c_report, window_ms),
+                bundle=canary, kind=c_bundle.kind)
+            if verbose:
+                print("\n" + render_canary(report["canary"]))
         if trace_out:
             events = build_trace(stream, report["records"], tick_ms,
                                  sample=trace_sample)
@@ -227,12 +298,25 @@ def main():
                          "as JSONL (render with repro.telemetry.report)")
     ap.add_argument("--trace-sample", type=float, default=1.0,
                     help="deterministic id-hash trace sampling rate")
+    ap.add_argument("--live", action="store_true",
+                    help="stream closed telemetry windows as NDJSON "
+                         "while the run executes (requires --telemetry); "
+                         "SLO burn-rate alerts are emitted inline")
+    ap.add_argument("--live-out", default=None,
+                    help="NDJSON sink for --live ('-' or unset: stdout)")
+    ap.add_argument("--slo-target", type=float, default=0.9,
+                    help="attainment objective for the burn-rate alerter")
+    ap.add_argument("--canary", default=None,
+                    help="second PolicyBundle to serve against the "
+                         "bit-identical stream; attaches the paired "
+                         "per-window diff under 'canary'")
     ap.add_argument("--round-replay", action="store_true",
                     help="compat mode: round-synchronous trace replay "
                          "with round-mean metrics vs the solver oracle")
     ap.add_argument("--out", default=None,
                     help="write the serving report as JSON")
     args = ap.parse_args()
+    require_writable(args.out, "--out")
     report = serve_bundle(args.bundle, rounds=args.rounds,
                           cells=args.cells, rate=args.rate,
                           seed=args.seed, quiet=args.quiet,
@@ -242,6 +326,9 @@ def main():
                           window_ms=args.window_ms,
                           trace_out=args.trace_out,
                           trace_sample=args.trace_sample,
+                          live=args.live, live_out=args.live_out,
+                          slo_target=args.slo_target,
+                          canary=args.canary,
                           round_replay=args.round_replay)
     if args.out:
         report.pop("records", None)  # raw numpy arrays, not JSON

@@ -49,6 +49,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import io_callback
 
 from repro.fleet import latency
 from repro.fleet.env import FleetConfig, FleetState, make_fleet_env
@@ -138,8 +139,17 @@ class ServeEngine(NamedTuple):
     cfg: ServeConfig
 
 
-def make_serve_engine(policy: Policy, cfg: ServeConfig) -> ServeEngine:
+def make_serve_engine(policy: Policy, cfg: ServeConfig,
+                      live=None) -> ServeEngine:
+    """``live`` is an optional ``repro.telemetry.LiveEmitter``; when set
+    (requires ``cfg.telemetry``) the tick scan reports each closed
+    metric window to the host through ``io_callback`` — windowed series
+    stream out as NDJSON *while* the jitted epoch runs.  ``live=None``
+    leaves the compiled program exactly as before."""
     require_jittable(policy, "the request-level serving engine")
+    if live is not None and not cfg.telemetry:
+        raise ValueError("live streaming requires ServeConfig.telemetry "
+                         "(the window series it exports)")
     env = make_fleet_env(cfg.fleet())
     n_max, Q = cfg.n_max, cfg.queue_cap
     slot = jnp.arange(n_max)
@@ -285,6 +295,18 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig) -> ServeEngine:
                         ("occ_cloud", (decided
                                        & (acts == latency.A_CLOUD)).sum())):
                     tel = set_gauge(tel, name, w, g)
+                if live is not None:
+                    # report this tick's window to the host; the window
+                    # is closed (final) once the next tick falls past it
+                    # — the driver's finish() flushes the last one
+                    w2 = window_of(tel, now + cfg.tick_ms, cfg.window_ms)
+                    io_callback(
+                        live.on_window, None, w, w2 > w, now,
+                        jnp.stack([tel.counters[n][w]
+                                   for n in TEL_COUNTERS]),
+                        jnp.stack([tel.gauges[n][w]
+                                   for n in TEL_GAUGES]),
+                        ordered=False)
 
             st2 = EngineState(
                 env=env2, key=key, q_ids=q_ids, q_head=q_head,
@@ -350,7 +372,7 @@ def _tick_buckets(stream: RequestStream, tick_ms: float,
 def serve_stream(policy: Policy, params, scenario: FleetScenario,
                  stream: RequestStream, cfg: ServeConfig, *, key=None,
                  on_epoch: Optional[Callable] = None,
-                 verbose: bool = False) -> dict:
+                 live=None, verbose: bool = False) -> dict:
     """Serve a :class:`RequestStream` end to end.  Returns the per-request
     report of ``repro.serve.metrics.request_report`` plus engine timing
     (steady-state = excluding the compile-bearing first epoch):
@@ -364,17 +386,23 @@ def serve_stream(policy: Policy, params, scenario: FleetScenario,
     ``on_epoch(epoch_idx, params) -> params`` runs at every stream epoch
     boundary (default: re-derive scenario-borne params via
     ``Policy.refresh``) — this is where a caller hot-swaps a freshly
-    trained PolicyBundle's params into live serving."""
+    trained PolicyBundle's params into live serving.
+
+    ``live`` (a ``repro.telemetry.LiveEmitter``, requires
+    ``cfg.telemetry``) streams each closed metric window as NDJSON from
+    inside the jitted tick scan, writes an ``epoch`` progress record at
+    every chunk boundary, and is flushed (final window + run summary)
+    before this function returns."""
     if scenario.n_cells != stream.n_cells:
         raise ValueError(f"stream built for {stream.n_cells} cells, "
                          f"scenario has {scenario.n_cells}")
     key = jax.random.PRNGKey(0) if key is None else key
-    engine = make_serve_engine(policy, cfg)
+    engine = make_serve_engine(policy, cfg, live=live)
     ticks_per_epoch = max(1, int(round(stream.epoch_ms / cfg.tick_ms)))
-    ids, now, live, n_epochs = _tick_buckets(stream, cfg.tick_ms,
-                                             ticks_per_epoch)
+    ids, now, live_ticks, n_epochs = _tick_buckets(
+        stream, cfg.tick_ms, ticks_per_epoch)
     N = stream.n_requests
-    n_ticks = int(live.sum())
+    n_ticks = int(live_ticks.sum())
     stream_t = jnp.asarray(np.append(stream.t_ms, 0.0), jnp.float32)
     stream_cell = jnp.asarray(np.append(stream.cell, 0), jnp.int32)
     stream_slo = jnp.asarray(np.append(stream.slo_ms, 0.0), jnp.float32)
@@ -393,20 +421,28 @@ def serve_stream(policy: Policy, params, scenario: FleetScenario,
         t0 = time.perf_counter()
         state, n_act = jax.block_until_ready(engine.run_epoch(
             params_t, scenario, state, jnp.asarray(ids[lo:hi]),
-            jnp.asarray(now[lo:hi]), jnp.asarray(live[lo:hi]),
+            jnp.asarray(now[lo:hi]), jnp.asarray(live_ticks[lo:hi]),
             stream_t, stream_cell, stream_slo))
         dt = time.perf_counter() - t0
         if e > 0:  # epoch 0 pays the XLA compile
             wall += dt
-            lanes += scenario.n_cells * int(live[lo:hi].sum())
+            lanes += scenario.n_cells * int(live_ticks[lo:hi].sum())
             active += int(n_act)
         else:
             compile_wall = dt
-        if verbose:
+        if verbose or live is not None:
             done = int(np.asarray(state.rec.served)[:N].sum())
-            print(f"  epoch {e:3d}: ticks [{lo}, {hi}), "
-                  f"{done:6d}/{N} requests served, "
-                  f"backlog {int(np.asarray(state.q_len).sum())}")
+            backlog = int(np.asarray(state.q_len).sum())
+            if live is not None:
+                live.epoch(e, ticks=hi - lo, served=done, n_requests=N,
+                           backlog=backlog,
+                           dropped=int(np.asarray(
+                               state.rec.dropped)[:N].sum()),
+                           wall_s=round(dt, 4))
+            if verbose:
+                print(f"  epoch {e:3d}: ticks [{lo}, {hi}), "
+                      f"{done:6d}/{N} requests served, "
+                      f"backlog {backlog}")
 
     records = {k: np.asarray(v)[:N] for k, v in
                state.rec._asdict().items()}
@@ -426,6 +462,8 @@ def serve_stream(policy: Policy, params, scenario: FleetScenario,
     report["records"] = records
     if cfg.telemetry:
         report["telemetry"] = telemetry_report(state.tel, cfg.window_ms)
+        if live is not None:
+            live.finish(report["telemetry"])
     return report
 
 

@@ -14,6 +14,17 @@
     profiling  ``profiled()`` context wrapper: compile-vs-run wall-clock
                split, peak memory, optional ``jax.profiler`` trace dir
                (``REPRO_PROFILE_DIR``) — the benchmarks report through it
+    live       in-flight NDJSON export: ``LiveEmitter`` receives closed
+               windows from inside the jitted scan via ``io_callback``
+               and streams them with multi-window SLO burn-rate alerts
+               (``serve_fleet --live``); ``TrainLiveEmitter`` does the
+               same for hltrain sessions
+    audit      invariant auditor: conservation laws over MetricBuffer
+               windows and lifecycle traces (admits == serves + drops +
+               still-queued, occupancy ≤ capacity, window sums == run
+               totals) — library, CLI, and benchmark post-run hook
+    canary     paired per-window diff of two policies served against the
+               bit-identical arrival stream (``serve_fleet --canary``)
 """
 from repro.telemetry.metrics import (MetricBuffer, metrics_init,
                                      count_event, set_gauge,
@@ -23,6 +34,12 @@ from repro.telemetry.metrics import (MetricBuffer, metrics_init,
 from repro.telemetry.trace import (build_trace, write_trace, read_trace,
                                    validate_trace)
 from repro.telemetry.profiling import Profile, profiled
+from repro.telemetry.live import (NdjsonSink, open_sink, BurnRateConfig,
+                                  BurnRateAlerter, LiveEmitter,
+                                  TrainLiveEmitter)
+from repro.telemetry.audit import (AuditResult, audit_serve_report,
+                                   audit_trace, audit_train_report)
+from repro.telemetry.canary import canary_diff, render_canary
 
 __all__ = [
     "MetricBuffer", "metrics_init", "count_event", "set_gauge",
@@ -30,4 +47,9 @@ __all__ = [
     "histogram_percentiles",
     "build_trace", "write_trace", "read_trace", "validate_trace",
     "Profile", "profiled",
+    "NdjsonSink", "open_sink", "BurnRateConfig", "BurnRateAlerter",
+    "LiveEmitter", "TrainLiveEmitter",
+    "AuditResult", "audit_serve_report", "audit_trace",
+    "audit_train_report",
+    "canary_diff", "render_canary",
 ]

@@ -1,7 +1,7 @@
 """Render a served run's JSONL lifecycle trace as a human summary.
 
     PYTHONPATH=src python -m repro.telemetry.report trace.jsonl \
-        [--window-ms 1000] [--top 8]
+        [--window-ms 1000] [--top 8] [--json]
 
 Validates the trace first (``validate_trace`` — unique request ids,
 known statuses, monotone lifecycle timestamps), then prints
@@ -13,11 +13,14 @@ known statuses, monotone lifecycle timestamps), then prints
 
 Reads nothing but the trace file, so it can be pointed at any JSONL
 written by ``serve_fleet --trace-out`` — including traces from other
-machines or CI artifacts.
+machines or CI artifacts.  ``--json`` emits the same figures as one
+machine-readable document (``summary`` / ``windows`` / ``by_tier`` /
+``by_cell``) for dashboards and scripted gates.
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import numpy as np
 
@@ -92,6 +95,22 @@ def action_tier(ev) -> str:
     return "edge" if a == latency.A_EDGE else "cloud"
 
 
+def report_data(path: str, *, window_ms: float = 1000.0) -> dict:
+    """The report's figures as one JSON-serializable document: the
+    ``validate_trace`` summary, the windowed time series, and the tier /
+    cell tail-latency breakdowns (cells sorted worst-p99-first)."""
+    events = read_trace(path)
+    summary = validate_trace(events)
+    served = [ev for ev in events if ev["status"] == "served"]
+    by_cell = breakdown(served, lambda ev: ev["cell"])
+    by_cell.sort(key=lambda r: -(r["p99_ms"] or 0.0))
+    return {"trace": path, "window_ms": float(window_ms),
+            "summary": summary,
+            "windows": windowed_series(events, window_ms),
+            "by_tier": breakdown(served, action_tier),
+            "by_cell": by_cell}
+
+
 def render(path: str, *, window_ms: float = 1000.0, top: int = 8) -> str:
     events = read_trace(path)
     summary = validate_trace(events)
@@ -136,8 +155,15 @@ def main():
     ap.add_argument("--window-ms", type=float, default=1000.0)
     ap.add_argument("--top", type=int, default=8,
                     help="worst-cells table length")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output (summary / windows / "
+                         "by_tier / by_cell)")
     args = ap.parse_args()
-    print(render(args.trace, window_ms=args.window_ms, top=args.top))
+    if args.json:
+        print(json.dumps(report_data(args.trace,
+                                     window_ms=args.window_ms), indent=2))
+    else:
+        print(render(args.trace, window_ms=args.window_ms, top=args.top))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,455 @@
+"""Live ops plane: streaming export, invariant audit, canary, history.
+
+Acceptance contract of the ops surface on top of PR 6's telemetry:
+  * ``--live`` streams ≥ 1 NDJSON window record per epoch *while the
+    jitted scan runs* (io_callback), each window exactly once, and the
+    streamed counters agree bit-for-bit with the run-end MetricBuffer
+    series; live without telemetry is rejected before compile
+  * the burn-rate alerter implements the classic multi-window rule:
+    fires only when both fast and slow trailing burns reach threshold,
+    counts drops as errors, tolerates duplicate/out-of-order windows
+  * the invariant auditor passes on a real telemetry-enabled run + its
+    trace and fails on tampered window series, violated capacity
+    bounds, and corrupted traces
+  * with a tiny queue cap the three independent drop accountings agree:
+    telemetry window counters, ``request_report``, and lifecycle trace
+  * ``canary_diff`` of a report against itself is all-zero with no
+    sign-flip windows; against a different policy it reports the
+    paired deltas
+  * ``serve_fleet`` rejects unwritable output parents up front and the
+    full --live + --canary path produces a coherent report
+  * bench history: append/load round-trip, first run passes (no
+    baseline), an injected slowdown fails the tier-1 gate
+"""
+import io
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from benchmarks import history
+from repro.fleet import FleetConfig, random_fleet
+from repro.fleet.workload import from_table4
+from repro.hltrain import FleetHLParams, make_hl_trainer
+from repro.policy import (PolicyBundle, dqn_policy,
+                          heuristic_greedy_policy, save_bundle)
+from repro.serve import (ServeConfig, poisson_request_stream,
+                         serve_stream)
+from repro.serve.engine import TEL_COUNTERS, TEL_GAUGES
+from repro.telemetry import (BurnRateAlerter, BurnRateConfig, LiveEmitter,
+                             NdjsonSink, TrainLiveEmitter,
+                             audit_serve_report, audit_trace,
+                             audit_train_report, build_trace, canary_diff,
+                             render_canary)
+from repro.telemetry.report import report_data
+from repro.launch.serve_fleet import require_writable, serve_bundle
+
+N_MAX, CELLS = 4, 8
+
+
+def mem_sink():
+    return NdjsonSink(io.StringIO())
+
+
+def sink_events(sink):
+    return [json.loads(l) for l in
+            sink._out.getvalue().strip().splitlines()]
+
+
+def run_live(window_ms=400.0, queue_cap=64, rate=2.0, rounds=8,
+             alerter=None):
+    scn = random_fleet(jax.random.PRNGKey(3), CELLS, n_max=N_MAX)
+    pol = heuristic_greedy_policy(N_MAX)
+    cfg = ServeConfig(n_max=N_MAX, quiet=True, telemetry=True,
+                      window_ms=window_ms, queue_cap=queue_cap)
+    stream = poisson_request_stream(
+        jax.random.PRNGKey(4), scn, rounds * cfg.round_ms, rate=rate,
+        round_ms=cfg.round_ms, epoch_ms=2 * cfg.round_ms)
+    sink = mem_sink()
+    live = LiveEmitter(sink, TEL_COUNTERS, TEL_GAUGES,
+                       window_ms=window_ms, alerter=alerter)
+    report = serve_stream(pol, pol.init(jax.random.PRNGKey(0)), scn,
+                          stream, cfg, key=jax.random.PRNGKey(5),
+                          live=live)
+    return stream, cfg, report, sink_events(sink)
+
+
+@pytest.fixture(scope="module")
+def live_run():
+    return run_live()
+
+
+# ------------------------------------------------------ live streaming
+def test_live_emits_every_window_once(live_run):
+    _, cfg, report, events = live_run
+    windows = [e for e in events if e["event"] == "window"]
+    n = report["telemetry"]["n_windows"]
+    assert sorted(w["window"] for w in windows) == list(range(n))
+    assert events[-1]["event"] == "summary"
+    assert events[-1]["n_windows"] == n
+
+
+def test_live_window_records_per_epoch(live_run):
+    """≥ 1 window record per epoch: with window_ms ≤ epoch_ms every
+    epoch's tick range closes at least one telemetry window."""
+    _, cfg, report, events = live_run
+    n_epochs = len([e for e in events if e["event"] == "epoch"])
+    windows = [e for e in events if e["event"] == "window"]
+    assert n_epochs >= 1
+    assert len(windows) >= n_epochs - 1  # final epoch may only flush
+
+
+def test_live_counters_match_run_end_series(live_run):
+    """The streamed per-window counters are the same numbers the run-end
+    MetricBuffer reports — live export adds a wire, not a second
+    bookkeeping."""
+    _, _, report, events = live_run
+    series = report["telemetry"]["series"]
+    for w in (e for e in events if e["event"] == "window"):
+        for name in TEL_COUNTERS:
+            assert w[name] == int(series[name][w["window"]]), name
+
+
+def test_live_epoch_records_progress(live_run):
+    _, _, report, events = live_run
+    epochs = [e for e in events if e["event"] == "epoch"]
+    served = [e["served"] for e in epochs]
+    assert served == sorted(served)
+    assert served[-1] == report["served_requests"]
+
+
+def test_live_requires_telemetry():
+    scn = random_fleet(jax.random.PRNGKey(3), CELLS, n_max=N_MAX)
+    pol = heuristic_greedy_policy(N_MAX)
+    cfg = ServeConfig(n_max=N_MAX, quiet=True)  # telemetry off
+    stream = poisson_request_stream(jax.random.PRNGKey(4), scn,
+                                    4 * cfg.round_ms, rate=1.0,
+                                    round_ms=cfg.round_ms)
+    live = LiveEmitter(mem_sink(), TEL_COUNTERS, TEL_GAUGES,
+                       window_ms=500.0)
+    with pytest.raises(ValueError, match="telemetry"):
+        serve_stream(pol, pol.init(jax.random.PRNGKey(0)), scn, stream,
+                     cfg, key=jax.random.PRNGKey(5), live=live)
+
+
+def test_train_live_sessions():
+    hp = FleetHLParams(epochs=2, n_direct=2, t_direct=4, n_world=4,
+                       n_suggest=1, t_suggest=2, n_plan=4, batch=32,
+                       updates_per_direct=1, updates_per_plan=1,
+                       telemetry=True)
+    scn = from_table4(names=("B",), constraints=("85%",))
+    sink = mem_sink()
+    trainer = make_hl_trainer(FleetConfig(n_max=5), hp,
+                              live=TrainLiveEmitter(sink))
+    state = trainer.init(jax.random.PRNGKey(0), scn)
+    state, _ = trainer.run(state, scn, 0, hp.epochs)
+    events = sink_events(sink)
+    assert len(events) == int(state.sessions)
+    assert all(e["event"] == "train_session" for e in events)
+    eps = [e["epsilon"] for e in events]
+    assert eps == sorted(eps, reverse=True)  # ε-schedule non-increasing
+
+
+def test_train_live_requires_telemetry():
+    hp = FleetHLParams(epochs=2)  # telemetry off
+    with pytest.raises(ValueError, match="telemetry"):
+        make_hl_trainer(FleetConfig(n_max=5), hp,
+                        live=TrainLiveEmitter(mem_sink()))
+
+
+# --------------------------------------------------- burn-rate alerter
+def test_alerter_fast_and_slow_must_both_burn():
+    a = BurnRateAlerter(BurnRateConfig(target=0.9, fast_windows=1,
+                                       slow_windows=3, threshold=2.0))
+    # healthy windows: burn 0 — no alert
+    assert a.observe(0, served=100, attained=100) is None
+    assert a.observe(1, served=100, attained=100) is None
+    # one bad window: fast burn spikes but the slow window absorbs it
+    # (errors 20/100 over 3 windows = 6.7% rate / 10% budget < 2.0)
+    assert a.observe(2, served=100, attained=80) is None
+    # sustained burn: both windows over threshold -> alert
+    alert = a.observe(3, served=100, attained=60)
+    assert alert is not None and alert["fast_burn"] >= 2.0
+    assert alert["slow_burn"] >= 2.0
+
+
+def test_alerter_drops_count_as_errors():
+    a = BurnRateAlerter(BurnRateConfig(target=0.9, fast_windows=1,
+                                       slow_windows=1, threshold=2.0))
+    # all served requests attain, but shedding half the load must page
+    alert = a.observe(0, served=50, attained=50, dropped=50)
+    assert alert is not None
+
+
+def test_alerter_duplicate_and_empty_windows():
+    a = BurnRateAlerter(BurnRateConfig(target=0.9, fast_windows=1,
+                                       slow_windows=1, threshold=1.0))
+    assert a.observe(0, served=0, attained=0) is None  # no exposure
+    first = a.observe(1, served=10, attained=0)
+    assert first is not None
+    assert a.observe(1, served=10, attained=0) is None  # dup ignored
+    assert a._ledger[1] == (10, 10)
+
+
+def test_alerter_rejects_degenerate_target():
+    with pytest.raises(ValueError):
+        BurnRateAlerter(BurnRateConfig(target=1.0))
+
+
+# ---------------------------------------------------- invariant audit
+def test_audit_passes_on_real_run(live_run):
+    stream, cfg, report, _ = live_run
+    trace = build_trace(stream, report["records"], cfg.tick_ms)
+    res = audit_serve_report(report, trace=trace, n_cells=CELLS,
+                             n_max=N_MAX, queue_cap=cfg.queue_cap)
+    assert res.ok, res.render()
+    res.raise_on_failure()  # no-op when ok
+    assert res.summary()["failed"] == []
+
+
+def test_audit_fails_on_tampered_series(live_run):
+    import copy
+    _, cfg, report, _ = live_run
+    bad = dict(report)
+    bad["telemetry"] = copy.deepcopy(report["telemetry"])
+    bad["telemetry"]["series"]["admitted"][0] += 1
+    res = audit_serve_report(bad, n_cells=CELLS, n_max=N_MAX,
+                             queue_cap=cfg.queue_cap)
+    assert not res.ok
+    assert "arrival_conservation" in res.summary()["failed"]
+    with pytest.raises(AssertionError):
+        res.raise_on_failure()
+
+
+def test_audit_fails_on_capacity_violation(live_run):
+    import copy
+    _, cfg, report, _ = live_run
+    bad = dict(report)
+    bad["telemetry"] = copy.deepcopy(report["telemetry"])
+    bad["telemetry"]["series"]["queue_depth"][0] = cfg.queue_cap + 1.0
+    res = audit_serve_report(bad, n_cells=CELLS, n_max=N_MAX,
+                             queue_cap=cfg.queue_cap)
+    assert "queue_depth_capacity" in res.summary()["failed"]
+
+
+def test_audit_fails_on_corrupted_trace(live_run):
+    stream, cfg, report, _ = live_run
+    trace = build_trace(stream, report["records"], cfg.tick_ms)
+    bad = [dict(e) for e in trace]
+    victim = next(e for e in bad
+                  if e["status"] == "served" and e["attained"])
+    victim["wait_ms"] += 10 * victim["slo_ms"]
+    res = audit_trace(bad, report=report)
+    assert not res.ok
+
+
+def test_audit_train_report_roundtrip():
+    hp = FleetHLParams(epochs=2, n_direct=2, t_direct=4, n_world=4,
+                       n_suggest=1, t_suggest=2, n_plan=4, batch=32,
+                       updates_per_direct=1, updates_per_plan=1,
+                       telemetry=True)
+    from repro.hltrain import train_telemetry_report
+    scn = from_table4(names=("B",), constraints=("85%",))
+    trainer = make_hl_trainer(FleetConfig(n_max=5), hp)
+    state = trainer.init(jax.random.PRNGKey(0), scn)
+    state, _ = trainer.run(state, scn, 0, hp.epochs)
+    rep = train_telemetry_report(state)
+    res = audit_train_report(rep, direct_steps=int(state.direct_steps),
+                             sessions=int(state.sessions))
+    assert res.ok, res.render()
+    rep["direct_steps"][0] += 1  # tamper: window sum != counter total
+    assert not audit_train_report(
+        rep, direct_steps=int(state.direct_steps)).ok
+
+
+# ---------------------------------- queue overflow: three drop ledgers
+def test_queue_overflow_counters_agree():
+    """Force drops with a tiny queue cap; the telemetry window counters,
+    the request report, and the lifecycle trace must count the same
+    drops — three independent accountings of one overflow."""
+    stream, cfg, report, events = run_live(queue_cap=2, rate=8.0,
+                                           rounds=6)
+    n_dropped = int(report["dropped_requests"])
+    assert n_dropped > 0, "tiny queue cap must force drops"
+    series = report["telemetry"]["series"]
+    assert int(np.sum(series["dropped"])) == n_dropped
+    trace = build_trace(stream, report["records"], cfg.tick_ms)
+    assert sum(e["status"] == "dropped" for e in trace) == n_dropped
+    # and the live stream saw the same total
+    assert sum(e["dropped"] for e in events
+               if e["event"] == "window") == n_dropped
+    res = audit_serve_report(report, trace=trace, n_cells=CELLS,
+                             n_max=N_MAX, queue_cap=cfg.queue_cap)
+    assert res.ok, res.render()
+
+
+# -------------------------------------------------------------- canary
+def test_canary_diff_identical_is_zero(live_run):
+    stream, cfg, report, _ = live_run
+    d = canary_diff(stream, report, report, cfg.window_ms)
+    assert d["d_dropped"] == 0
+    assert d["d_p99_ms"] in (None, 0.0)
+    assert d["d_attainment"] in (None, 0.0)
+    assert all(not v for v in d["sign_flip_windows"].values())
+    for r in d["windows"]:
+        assert not r["d_p99_ms"] and not r["d_dropped"]
+
+
+def test_canary_diff_detects_worse_policy(live_run):
+    stream, cfg, report, _ = live_run
+    scn = random_fleet(jax.random.PRNGKey(3), CELLS, n_max=N_MAX)
+    pol = dqn_policy(cfg.fleet().spec(), hidden=(8,))
+    worse = serve_stream(pol, pol.init(jax.random.PRNGKey(1)), scn,
+                         stream, ServeConfig(n_max=N_MAX, quiet=True),
+                         key=jax.random.PRNGKey(5))
+    d = canary_diff(stream, report, worse, cfg.window_ms)
+    assert d["n_windows"] == len(d["windows"])
+    assert json.dumps(d)  # JSON-stable for the report
+    text = render_canary(d)
+    assert "overall" in text and "sign-flip" in text
+
+
+def test_canary_requires_records(live_run):
+    stream, cfg, report, _ = live_run
+    stripped = {k: v for k, v in report.items() if k != "records"}
+    with pytest.raises(ValueError, match="records"):
+        canary_diff(stream, stripped, report, cfg.window_ms)
+
+
+# ------------------------------------------------- serve_fleet surface
+def _write_bundle(path, kind="greedy"):
+    if kind == "greedy":
+        pol = heuristic_greedy_policy(N_MAX)
+        key = jax.random.PRNGKey(0)
+    else:
+        pol = dqn_policy(FleetConfig(n_max=N_MAX, obs_spec="full").spec(),
+                         hidden=(8,))
+        key = jax.random.PRNGKey(1)
+    save_bundle(str(path), PolicyBundle(kind=kind, obs_spec="full",
+                                        n_max=N_MAX,
+                                        params=pol.init(key)))
+
+
+def test_require_writable_rejects_bad_parent(tmp_path):
+    with pytest.raises(SystemExit, match="does not exist"):
+        require_writable(str(tmp_path / "no" / "such" / "t.jsonl"),
+                         "--trace-out")
+    require_writable(str(tmp_path / "ok.jsonl"), "--trace-out")
+    require_writable(None, "--trace-out")
+    require_writable("-", "--live-out")
+
+
+def test_serve_bundle_rejects_bad_combos(tmp_path):
+    bundle = tmp_path / "b.msgpack"
+    _write_bundle(bundle)
+    with pytest.raises(SystemExit, match="telemetry"):
+        serve_bundle(str(bundle), live=True, verbose=False)
+    with pytest.raises(SystemExit, match="round-replay"):
+        serve_bundle(str(bundle), canary=str(bundle), round_replay=True,
+                     verbose=False)
+    # the path check beats the compile: a bad trace parent exits
+    # immediately even though everything else is valid
+    with pytest.raises(SystemExit, match="parent directory"):
+        serve_bundle(str(bundle),
+                     trace_out=str(tmp_path / "no" / "t.jsonl"),
+                     verbose=False)
+
+
+def test_serve_bundle_live_and_canary_end_to_end(tmp_path):
+    primary, other = tmp_path / "a.msgpack", tmp_path / "b.msgpack"
+    _write_bundle(primary, "greedy")
+    _write_bundle(other, "dqn")
+    live_out = tmp_path / "live.ndjson"
+    report = serve_bundle(str(primary), rounds=6, cells=6, rate=2.0,
+                          seed=0, quiet=True, telemetry=True,
+                          window_ms=400.0, live=True,
+                          live_out=str(live_out), canary=str(other),
+                          verbose=False)
+    events = [json.loads(l) for l in live_out.read_text().splitlines()]
+    kinds = {e["event"] for e in events}
+    assert "window" in kinds and "summary" in kinds
+    n_windows = report["telemetry"]["n_windows"]
+    assert len([e for e in events if e["event"] == "window"]) == n_windows
+    canary = report["canary"]
+    assert canary["bundle"] == str(other) and canary["kind"] == "dqn"
+    assert len(canary["windows"]) == canary["n_windows"]
+    # config echo keeps the run reproducible from its report alone
+    assert report["config"]["live"] and report["config"]["canary"]
+
+
+# ------------------------------------------------------- bench history
+def _result(dps, smoke=True):
+    return {"smoke": smoke, "decisions_per_s": dps}
+
+
+def test_history_append_and_filtered_load(tmp_path):
+    path = str(tmp_path / "hist.jsonl")
+    assert history.load_history(path) == []
+    history.append_entry("fleet", _result(1e5), path=path)
+    history.append_entry("fleet", _result(2e5, smoke=False), path=path)
+    history.append_entry("serve", {"smoke": True}, path=path)
+    assert len(history.load_history(path)) == 3
+    smoke_fleet = history.load_history(path, bench="fleet", smoke=True)
+    assert [e["result"]["decisions_per_s"] for e in smoke_fleet] == [1e5]
+    entry = smoke_fleet[0]
+    assert entry["timestamp"] and "result" in entry
+
+
+def test_history_first_run_passes_then_regression_fails(tmp_path):
+    path = str(tmp_path / "hist.jsonl")
+    # first run: nothing to compare against -> skip, pass
+    v = history.check_regression("fleet", _result(1e5),
+                                 history.load_history(path, bench="fleet"))
+    assert v["ok"] and v["checks"][0]["skipped"]
+    for dps in (1e5, 1.1e5, 0.9e5):
+        history.append_entry("fleet", _result(dps), path=path)
+    prior = history.load_history(path, bench="fleet", smoke=True)
+    ok = history.check_regression("fleet", _result(0.9e5), prior)
+    assert ok["ok"]
+    bad = history.check_regression("fleet", _result(1e3), prior)
+    assert not bad["ok"]
+    c = bad["checks"][0]
+    assert c["metric"] == "decisions_per_s" and c["median"] == 1e5
+    assert "FAIL" in history.render_verdict(bad)
+
+
+def test_history_record_gates_and_appends(tmp_path, capsys):
+    path = str(tmp_path / "hist.jsonl")
+    history.record("fleet", _result(1e5), path=path, check=True)
+    with pytest.raises(SystemExit, match="regression"):
+        history.record("fleet", _result(1e3), path=path, check=True)
+    # check-before-append: the regressing run is still recorded (the
+    # ledger is an archive), but was judged against the prior median
+    assert len(history.load_history(path, bench="fleet")) == 2
+
+
+def test_history_tier1_metrics_resolve_in_bench_schemas():
+    """The dotted tier-1 paths must match the benchmarks' JSON schemas —
+    a renamed figure silently disables its gate otherwise."""
+    serve_like = {"request_decisions_per_s": 1.0,
+                  "policies": {"greedy": {"p99_latency_ms": 2.0,
+                                          "slo_attainment": 0.9}}}
+    for metric, _, _ in history.TIER1["serve"]:
+        assert history.lookup(serve_like, metric) is not None, metric
+    assert history.lookup({"fleet_hl": {"steps_per_s": 3.0}},
+                          "fleet_hl.steps_per_s") == 3.0
+    assert history.lookup({}, "a.b") is None
+
+
+# ------------------------------------------------------ report --json
+def test_report_json_document(live_run, tmp_path):
+    from repro.telemetry import write_trace
+    stream, cfg, report, _ = live_run
+    path = str(tmp_path / "trace.jsonl")
+    write_trace(path, build_trace(stream, report["records"], cfg.tick_ms))
+    doc = report_data(path, window_ms=cfg.window_ms)
+    assert json.dumps(doc)
+    assert doc["summary"]["served"] == report["served_requests"]
+    assert sum(r["served"] for r in doc["windows"]) \
+        == report["served_requests"]
+    assert {r["group"] for r in doc["by_tier"]} \
+        <= {"local", "edge", "cloud", "?"}
+    p99s = [r["p99_ms"] or 0.0 for r in doc["by_cell"]]
+    assert p99s == sorted(p99s, reverse=True)
