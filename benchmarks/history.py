@@ -44,6 +44,7 @@ TIER1 = {
     ],
     "serve": [
         ("request_decisions_per_s", "higher", 0.9),
+        ("sharded_request_decisions_per_s", "higher", 0.9),
         ("policies.greedy.p99_latency_ms", "lower", 0.25),
         ("policies.greedy.slo_attainment", "higher", 0.10),
     ],

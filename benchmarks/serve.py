@@ -29,6 +29,16 @@ and request-level figures (``p50/p95/p99_latency_ms``, ``slo_attainment``,
 memory (``compile_time_s`` / ``run_time_s`` / ``peak_memory_mb``) — CI
 gates on those fields being present.  ``--smoke`` shrinks training to a
 minutes-scale CI job and marks the JSON ``smoke: true``.
+
+``--cells-sweep`` adds a fleet-size scaling sweep of the request engine:
+each size is served twice on the *same* stream — single-device, then
+``shard_map``-sharded over every visible device (run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to emulate a
+mesh on CPU) — with record parity asserted to 1e-5 and per-size
+throughput/p99/compile-run rows emitted as ``cells_sweep``.  The
+sharded throughput at the largest size lands as the tier-1-gated
+``sharded_request_decisions_per_s``.  ``--sweep-only`` skips training
+and the per-policy serving matrix (the sharded CI job uses it).
 """
 from __future__ import annotations
 
@@ -38,6 +48,7 @@ import json
 import os
 
 import jax
+import numpy as np
 
 from benchmarks import history
 from repro.fleet import FleetConfig, curriculum_fleets, random_fleet
@@ -80,11 +91,141 @@ def save_greedy_bundle(path: str) -> None:
         params=policy.init(jax.random.PRNGKey(0))))
 
 
+def run_cells_sweep(smoke: bool, rate: float) -> dict:
+    """Fleet-size scaling sweep: serve the same stream single-device and
+    sharded over every visible device, assert record parity ≤ 1e-5, and
+    report per-size throughput rows.
+
+    Single-device serving runs the interpret-mode Pallas group-occupancy
+    kernel, whose cost grows with C²; the sharded path reduces the
+    cross-cell couplings with ``segment_sum`` + ``psum`` per shard, so
+    past the crossover fleet size the mesh wins even when the forced
+    host devices share one physical core — the speedup is algorithmic
+    (per-shard work), not parallel.
+    """
+    from repro.sharding.runtime import cells_mesh
+
+    n_dev = jax.device_count()
+    sizes = [32, 512, 4096] if smoke else [32, 512, 4096, 16384, 65536]
+    sizes = [c for c in sizes if c % n_dev == 0]
+    policy = heuristic_greedy_policy(N_MAX)
+    params = policy.init(jax.random.PRNGKey(0))
+    scfg = ServeConfig(n_max=N_MAX, obs_spec=OBS_SPEC, tick_ms=TICK_MS,
+                       shared_cloud=True, shared_edge=True)
+    rnd = lambda v, d: None if v is None else round(v, d)
+
+    rows = []
+    with profiled("cells_sweep") as prof:
+        for c in sizes:
+            # rounds shrink with fleet size: decisions/s is a per-tick
+            # steady-state figure, so fewer ticks at the big sizes keep
+            # the sweep's wall clock bounded without moving the number
+            rounds = 10 if smoke else (20 if c <= 1024 else
+                                       10 if c <= 4096 else
+                                       6 if c <= 16384 else 4)
+            k = jax.random.fold_in(jax.random.PRNGKey(17), c)
+            k_fleet, k_serve = jax.random.split(k)
+            scn = random_fleet(k_fleet, c, n_max=N_MAX, cells_per_edge=4)
+            horizon_ms = rounds * scfg.round_ms
+            stream = poisson_request_stream(
+                k_fleet, scn, horizon_ms, rate=rate,
+                round_ms=scfg.round_ms,
+                epoch_ms=horizon_ms / (4 if c <= 4096 else 2))
+            r1 = serve_stream(policy, params, scn, stream, scfg,
+                              key=k_serve)
+            if prof._t_split is None:
+                prof.split()  # the first run paid the XLA compiles
+            row = {"cells": c, "rounds": rounds,
+                   "n_requests": stream.n_requests,
+                   "decisions_per_s_1dev": rnd(r1["decisions_per_s"], 1),
+                   "compile_time_s_1dev": rnd(r1["compile_time_s"], 3),
+                   "run_time_s_1dev": rnd(r1["run_time_s"], 3),
+                   "p99_latency_ms": rnd(r1["p99_latency_ms"], 2)}
+            if n_dev > 1:
+                rS = serve_stream(policy, params, scn, stream, scfg,
+                                  key=k_serve, mesh=cells_mesh())
+                parity = max(
+                    float(np.abs(np.asarray(r1["records"][f], np.float64)
+                                 - np.asarray(rS["records"][f],
+                                              np.float64)).max())
+                    for f in r1["records"])
+                if parity > 1e-5:
+                    raise RuntimeError(
+                        f"sharded/single-device record divergence at "
+                        f"{c} cells: max abs diff {parity} > 1e-5")
+                row.update({
+                    "decisions_per_s_sharded":
+                        rnd(rS["decisions_per_s"], 1),
+                    "compile_time_s_sharded":
+                        rnd(rS["compile_time_s"], 3),
+                    "run_time_s_sharded": rnd(rS["run_time_s"], 3),
+                    "speedup_x": rnd(rS["decisions_per_s"]
+                                     / r1["decisions_per_s"], 3),
+                    "parity_max_abs_diff": parity})
+            rows.append(row)
+            shard_txt = (f", {n_dev}dev "
+                         f"{row['decisions_per_s_sharded']:,.0f} dec/s "
+                         f"({row['speedup_x']:.2f}x, parity "
+                         f"{row['parity_max_abs_diff']:g})"
+                         if n_dev > 1 else "")
+            print(f"— sweep {c:>6} cells: 1dev "
+                  f"{row['decisions_per_s_1dev']:,.0f} dec/s"
+                  f"{shard_txt} —")
+
+    peak_1dev = max(r["decisions_per_s_1dev"] for r in rows)
+    last = rows[-1]
+    sharded_peak = (max(r["decisions_per_s_sharded"] for r in rows)
+                    if n_dev > 1 else None)
+    sweep = {
+        "devices": n_dev,
+        "rows": rows,
+        "sharded_request_decisions_per_s":
+            last.get("decisions_per_s_sharded"),
+        # the ≥100x single-device target, with the honest gap: on this
+        # host the forced devices share the physical cores, so the only
+        # headroom is algorithmic — real meshes add compute per shard
+        "target_100x": {
+            "target_x": 100.0,
+            "single_device_peak_decisions_per_s": peak_1dev,
+            "sharded_peak_decisions_per_s": sharded_peak,
+            "large_fleet_cells": last["cells"],
+            "large_fleet_speedup_x": last.get("speedup_x"),
+            "achieved_x_vs_single_device_peak":
+                (None if sharded_peak is None
+                 else round(sharded_peak / peak_1dev, 3)),
+        },
+        **{k: v for k, v in prof.report().items() if k != "label"},
+    }
+    return sweep
+
+
 def main(smoke: bool = False, cells: int = 64, rounds: int = 40,
          rate: float = 3.0, workdir: str = "results/serve",
          out: str = "BENCH_serve.json",
          check_regression: bool = False,
-         history_path: str = history.DEFAULT_PATH) -> dict:
+         history_path: str = history.DEFAULT_PATH,
+         cells_sweep: bool = False, sweep_only: bool = False) -> dict:
+    if sweep_only:
+        # the sharded CI job: no training, no per-policy matrix — just
+        # the scaling sweep (plus the greedy bundle, which the job's
+        # serve_fleet --mesh-cells CLI step loads)
+        os.makedirs(workdir, exist_ok=True)
+        save_greedy_bundle(os.path.join(workdir, "greedy.bundle.msgpack"))
+        sweep = run_cells_sweep(smoke, rate)
+        result = {
+            "smoke": smoke, "sweep_only": True, "rate": rate,
+            "n_max": N_MAX, "obs_spec": OBS_SPEC, "tick_ms": TICK_MS,
+            "cells_sweep": sweep,
+            "sharded_request_decisions_per_s":
+                sweep["sharded_request_decisions_per_s"],
+        }
+        with open(out, "w") as f:
+            json.dump(result, f, indent=2)
+        print("wrote", out)
+        history.record("serve", result, path=history_path,
+                       check=check_regression)
+        return result
+
     if smoke:
         cells, rounds = min(cells, 32), min(rounds, 25)
         hp = FleetHLParams(epochs=8, n_direct=4, t_direct=6, n_world=8,
@@ -213,6 +354,11 @@ def main(smoke: bool = False, cells: int = 64, rounds: int = 40,
         # policy's first calls carry every XLA compile
         **{k: v for k, v in prof.report().items() if k != "label"},
     }
+    if cells_sweep:
+        sweep = run_cells_sweep(smoke, rate)
+        result["cells_sweep"] = sweep
+        result["sharded_request_decisions_per_s"] = \
+            sweep["sharded_request_decisions_per_s"]
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
     print("wrote", out)
@@ -236,6 +382,15 @@ if __name__ == "__main__":
                         "tolerance vs the bench-history median")
     p.add_argument("--history", default=history.DEFAULT_PATH,
                    help="bench-history ledger (JSONL)")
+    p.add_argument("--cells-sweep", action="store_true",
+                   help="add the fleet-size scaling sweep (single-device "
+                        "vs sharded over all visible devices)")
+    p.add_argument("--sweep-only", action="store_true",
+                   help="run only the scaling sweep (implies "
+                        "--cells-sweep; skips training and the "
+                        "per-policy matrix)")
     a = p.parse_args()
     main(a.smoke, a.cells, a.rounds, a.rate, a.workdir, a.out,
-         check_regression=a.check_regression, history_path=a.history)
+         check_regression=a.check_regression, history_path=a.history,
+         cells_sweep=a.cells_sweep or a.sweep_only,
+         sweep_only=a.sweep_only)

@@ -63,6 +63,15 @@ class FleetConfig:
     # Observation layout variant (repro.specs.observation.SPEC_NAMES);
     # "base" is bit-compatible with the pre-spec Table-II layout.
     obs_spec: str = "base"
+    # Set when the env runs *inside* a ``shard_map`` over a mesh axis of
+    # cells: ``cell_axis`` names the axis and ``cell_axis_size`` its size.
+    # The env then treats ``scenario.n_cells`` as the per-shard count and
+    # reduces the cross-cell couplings (shared cloud occupancy, edge-group
+    # occupancy, fleet-wide load aggregates) with ``psum`` over that axis,
+    # so a sharded fleet is numerically identical to the same fleet on one
+    # device (background draws are keyed per *global* cell id).
+    cell_axis: str | None = None
+    cell_axis_size: int = 1
 
     def spec(self) -> ObservationSpec:
         return make_spec(self.obs_spec, self.n_max)
@@ -101,23 +110,37 @@ def make_fleet_env(cfg: FleetConfig) -> FleetEnvFns:
     n_max = cfg.n_max
     spec = cfg.spec()
 
+    def _cell0(n_cells: int):
+        """Global id of this shard's first cell (0 off-mesh)."""
+        if cfg.cell_axis is None:
+            return 0
+        return jax.lax.axis_index(cfg.cell_axis) * n_cells
+
     def sample_background(key, n_cells: int) -> FleetBackground:
+        """Background flags keyed per *global* cell id (``fold_in``), so
+        the draws a cell sees are a function of (key, its id) only — the
+        sharded env reproduces the single-device background bit-exactly
+        from the same replicated key."""
         if cfg.quiet:
             zc = jnp.zeros((n_cells, n_max), bool)
             z = jnp.zeros((n_cells,), bool)
             zi = jnp.zeros((n_cells,), jnp.int32)
             return FleetBackground(zc, zc, z, z, zi, zi)
         p = cfg.bg_busy_prob
-        ks = jax.random.split(key, 6)
-        u = lambda k, shape: jax.random.uniform(k, shape)
-        return FleetBackground(
-            u(ks[0], (n_cells, n_max)) < p,
-            u(ks[1], (n_cells, n_max)) < p,
-            u(ks[2], (n_cells,)) < p,
-            u(ks[3], (n_cells,)) < p,
-            (u(ks[4], (n_cells,)) < p / 2).astype(jnp.int32),
-            (u(ks[5], (n_cells,)) < p / 2).astype(jnp.int32),
-        )
+
+        def one_cell(cid):
+            ks = jax.random.split(jax.random.fold_in(key, cid), 6)
+            u = lambda k, shape: jax.random.uniform(k, shape)
+            return FleetBackground(
+                u(ks[0], (n_max,)) < p,
+                u(ks[1], (n_max,)) < p,
+                u(ks[2], ()) < p,
+                u(ks[3], ()) < p,
+                (u(ks[4], ()) < p / 2).astype(jnp.int32),
+                (u(ks[5], ()) < p / 2).astype(jnp.int32),
+            )
+
+        return jax.vmap(one_cell)(_cell0(n_cells) + jnp.arange(n_cells))
 
     def init(key, scenario: FleetScenario) -> FleetState:
         n_cells = scenario.n_cells
@@ -140,17 +163,29 @@ def make_fleet_env(cfg: FleetConfig) -> FleetEnvFns:
             user=jnp.zeros_like(state.user),
             charged=jnp.zeros_like(state.charged))
 
+    def _n_cells_global(n_cells: int) -> int:
+        return n_cells * cfg.cell_axis_size
+
+    def _fleet_sum(x):
+        """Sum over all cells of the fleet, across shards when sharded."""
+        total = x.sum()
+        if cfg.cell_axis is not None:
+            total = jax.lax.psum(total, cfg.cell_axis)
+        return total
+
     def _cloud_coupling(actions, mask):
         """(C,) extra cloud occupancy each cell sees from *other* cells'
         assigned cloud requests (zero unless cfg.shared_cloud)."""
         own = ((actions == latency.A_CLOUD) & mask).sum(-1)
-        return own.sum() - own
+        return _fleet_sum(own) - own
 
     def _edge_coupling(scenario, actions, mask):
         """(C,) extra edge occupancy from co-located cells' assigned edge
         requests (zero unless cfg.shared_edge / non-singleton groups)."""
         own = ((actions == latency.A_EDGE) & mask).sum(-1)
-        return latency.group_coupling(own, scenario.edge_groups())
+        return latency.group_coupling(
+            own, scenario.edge_groups(), axis=cfg.cell_axis,
+            num_segments=_n_cells_global(scenario.n_cells))
 
     def _round_times(scenario, state, actions):
         """Per-slot response times under the partial assignment (undecided
@@ -190,13 +225,16 @@ def make_fleet_env(cfg: FleetConfig) -> FleetEnvFns:
         # fleet-wide mean cloud occupancy (cloud_load block input):
         # every cell sees the same scalar — the cloud is one tier
         cloud_fleet = jnp.broadcast_to(
-            (own_cloud + state.bg.bg_cloud).sum() / n_cells, (n_cells,))
+            _fleet_sum(own_cloud + state.bg.bg_cloud)
+            / _n_cells_global(n_cells), (n_cells,))
         # per-group mean edge occupancy (edge_load block input)
         groups = scenario.edge_groups()
         edge_occ = own_edge + state.bg.bg_edge
-        group_sz = latency.group_occupancy(jnp.ones_like(groups), groups)
-        edge_group = (latency.group_occupancy(edge_occ, groups)
-                      / jnp.maximum(1, group_sz))
+        go = lambda v: latency.group_occupancy(
+            v, groups, axis=cfg.cell_axis,
+            num_segments=_n_cells_global(n_cells))
+        group_sz = go(jnp.ones_like(groups))
+        edge_group = go(edge_occ) / jnp.maximum(1, group_sz)
         return spec.encode_jnp(ObsInputs(
             user=state.user, n_users=scenario.n_users,
             busy_p_s=state.bg.busy_p_s, busy_m_s=state.bg.busy_m_s,

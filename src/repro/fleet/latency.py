@@ -17,6 +17,8 @@ same fleet).  ``mask=None`` is exactly the reference semantics.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -25,6 +27,11 @@ from repro.env import latency_model as lm
 N_MODELS = lm.N_MODELS
 N_ACTIONS = lm.N_ACTIONS
 A_EDGE, A_CLOUD = lm.A_EDGE, lm.A_CLOUD
+
+# The fused Pallas group-occupancy kernel is the default path; set
+# REPRO_ORCH_KERNELS=0 to fall back to the segment_sum reference
+# (diagnostic escape hatch, parity-tested identical).
+USE_KERNELS = os.environ.get("REPRO_ORCH_KERNELS", "1") != "0"
 
 
 def group_slot_mask(groups: jnp.ndarray) -> jnp.ndarray:
@@ -39,24 +46,54 @@ def group_slot_mask(groups: jnp.ndarray) -> jnp.ndarray:
     return groups[:, None] == groups[None, :]
 
 
-def group_occupancy(own: jnp.ndarray, groups: jnp.ndarray) -> jnp.ndarray:
-    """(C,) total occupancy of each cell's group (own contribution
-    included): ``out[i] = sum_j own[j] · [groups[j] == groups[i]]``.
-
-    Equivalent to ``group_slot_mask(groups) @ own`` but via one
-    ``segment_sum`` + gather.  Group ids must lie in [0, C).
-    """
+def group_occupancy_ref(own: jnp.ndarray, groups: jnp.ndarray,
+                        num_segments: int | None = None) -> jnp.ndarray:
+    """Unfused reference: one ``segment_sum`` + gather."""
     groups = jnp.asarray(groups)
-    totals = jax.ops.segment_sum(own, groups,
-                                 num_segments=groups.shape[0])
+    n = groups.shape[0] if num_segments is None else num_segments
+    totals = jax.ops.segment_sum(own, groups, num_segments=n)
     return totals[groups]
 
 
-def group_coupling(own: jnp.ndarray, groups: jnp.ndarray) -> jnp.ndarray:
+def group_occupancy(own: jnp.ndarray, groups: jnp.ndarray, *,
+                    axis: str | None = None,
+                    num_segments: int | None = None) -> jnp.ndarray:
+    """(C,) total occupancy of each cell's group (own contribution
+    included): ``out[i] = sum_j own[j] · [groups[j] == groups[i]]``.
+
+    Equivalent to ``group_slot_mask(groups) @ own``.  Group ids must lie
+    in [0, num_segments) (defaults to the local cell count).
+
+    Two execution paths:
+
+    - ``axis`` set (inside ``shard_map`` over a cell axis): groups may
+      span shards, so per-shard segment totals over the *global* id
+      space (``num_segments``) are ``psum``-reduced across ``axis``
+      before the gather — exact cross-shard group occupancy.
+    - otherwise: the fused Pallas kernel from
+      ``repro.kernels.orchestration`` (default; ``REPRO_ORCH_KERNELS=0``
+      falls back to :func:`group_occupancy_ref`).
+    """
+    if axis is not None:
+        groups = jnp.asarray(groups)
+        n = groups.shape[0] if num_segments is None else num_segments
+        totals = jax.ops.segment_sum(own, groups, num_segments=n)
+        totals = jax.lax.psum(totals, axis)
+        return totals[groups]
+    if USE_KERNELS:
+        from repro.kernels.orchestration import group_occupancy_pallas
+        return group_occupancy_pallas(own, jnp.asarray(groups))
+    return group_occupancy_ref(own, groups, num_segments)
+
+
+def group_coupling(own: jnp.ndarray, groups: jnp.ndarray, *,
+                   axis: str | None = None,
+                   num_segments: int | None = None) -> jnp.ndarray:
     """(C,) extra occupancy each cell sees from *co-located* cells (its
     edge group minus its own contribution).  Singleton groups → zero,
     which is the uncoupled-env parity guarantee."""
-    return group_occupancy(own, groups) - own
+    return group_occupancy(own, groups, axis=axis,
+                           num_segments=num_segments) - own
 
 
 def action_accuracy(actions: jnp.ndarray) -> jnp.ndarray:

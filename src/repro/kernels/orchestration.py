@@ -1,0 +1,169 @@
+"""Pallas kernels for the orchestration hot path.
+
+The serving engine's per-tick work is dominated by two memory-bound
+scatter/gather patterns that XLA lowers into long chains of small ops:
+
+``group_occupancy``
+    The shared-edge coupling needs, for every cell i, the total edge
+    occupancy of its co-location group: ``out[i] = Σ_j own[j] ·
+    [groups[j] == groups[i]]``.  The lax reference is a ``segment_sum``
+    followed by a gather; the kernel fuses both into one blocked
+    membership-matvec — a (blk, C) equality mask contracted against
+    ``own`` on the MXU, no (C,) totals round-trip through HBM.
+
+``queue_admit``
+    Admitting one tick's arrival burst into the per-cell FIFO ring
+    queues was a sequential ``fori_loop`` over arrival lanes (each lane
+    read-modify-writes ``q_len``).  The kernel re-derives each lane's
+    ring position *in closed form* — its FIFO rank among same-cell lanes
+    of the tick — so occupancy tests and position computation vectorize,
+    and only the final (provably conflict-free) element stores remain
+    serial.  A lane is admitted iff ``q_len0[cell] + rank < Q``, which
+    is exactly the sequential loop's outcome (test-enforced against a
+    host-side sequential reference over randomized bursts).
+
+Both kernels run under ``interpret=True`` on CPU CI — the same code
+lowers to Mosaic on a real TPU by flipping ``INTERPRET`` (matching the
+``repro.kernels.ops`` convention for the seed LM kernels).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# CPU-only container default; a TPU deployment flips this (or passes
+# interpret=False) and the same kernels lower to Mosaic.
+INTERPRET = True
+
+_GO_BLK = 128
+
+
+def _group_occupancy_kernel(own_ref, g_all_ref, g_blk_ref, out_ref):
+    """One block of cells: out[i] = Σ_j own[j] · [g_j == g_i] as a
+    membership-mask matvec (MXU-friendly, no scatter)."""
+    own = own_ref[...]
+    eq = (g_blk_ref[...][:, None] == g_all_ref[...][None, :])
+    out_ref[...] = eq.astype(jnp.float32) @ own
+
+
+def group_occupancy_pallas(own, groups, *, blk: int = _GO_BLK,
+                           interpret: bool | None = None) -> jnp.ndarray:
+    """Fused segment-sum + gather: (C,) own, (C,) int group ids in
+    [0, C) → (C,) per-cell group totals.  Exact for integer-valued
+    occupancies (counts ≤ 2^24 are exact in f32)."""
+    it = INTERPRET if interpret is None else interpret
+    c = own.shape[0]
+    cp = -(-c // blk) * blk
+    own_p = jnp.pad(own.astype(jnp.float32), (0, cp - c))
+    groups = jnp.asarray(groups, jnp.int32)
+    # pad ids so padded columns (-1) match nothing and padded rows (-2)
+    # produce zeros that are sliced off below
+    g_cols = jnp.pad(groups, (0, cp - c), constant_values=-1)
+    g_rows = jnp.pad(groups, (0, cp - c), constant_values=-2)
+    out = pl.pallas_call(
+        _group_occupancy_kernel,
+        grid=(cp // blk,),
+        in_specs=[pl.BlockSpec((cp,), lambda i: (0,)),
+                  pl.BlockSpec((cp,), lambda i: (0,)),
+                  pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((cp,), jnp.float32),
+        interpret=it,
+    )(own_p, g_cols, g_rows)
+    return out[:c].astype(own.dtype)
+
+
+def _queue_admit_kernel(qids_ref, qhead_ref, qlen_ref, rid_ref, cell_ref,
+                        valid_ref, qids_out, qlen_out, adm_ref, *, q: int):
+    rid = rid_ref[...]
+    cell = cell_ref[...]
+    valid = valid_ref[...]
+    a = rid.shape[0]
+    lane = jnp.arange(a)
+    # FIFO rank: earlier valid lanes of the same cell this tick.  The
+    # sequential loop admits the first (Q - q_len0) same-cell lanes and
+    # places lane r at ring slot head + q_len0 + r — closed form below.
+    same = (cell[:, None] == cell[None, :]) & valid[None, :]
+    rank = (same & (lane[None, :] < lane[:, None])).sum(-1)
+    qlen0 = qlen_ref[...]
+    c_safe = jnp.maximum(cell, 0)
+    ok = valid & (qlen0[c_safe] + rank < q)
+    pos = (qhead_ref[...][c_safe] + qlen0[c_safe] + rank) % q
+    adm_ref[...] = ok
+    n_cells = qlen0.shape[0]
+    per_cell = ((jnp.arange(n_cells)[:, None] == cell[None, :])
+                & ok[None, :]).sum(-1)
+    qlen_out[...] = qlen0 + per_cell.astype(jnp.int32)
+    qids_out[...] = qids_ref[...]
+
+    def store(i, _):
+        c, p = c_safe[i], pos[i]
+        cur = qids_out[c, p]
+        qids_out[c, p] = jnp.where(ok[i], rid[i], cur)
+        return 0
+
+    jax.lax.fori_loop(0, a, store, 0)
+
+
+def queue_admit_pallas(q_ids, q_head, q_len, rid, cell, valid,
+                       interpret: bool | None = None):
+    """Admit one tick's arrival burst into the per-cell FIFO rings.
+
+    q_ids: (C, Q) int32 ring slots; q_head/q_len: (C,) int32;
+    rid/cell: (A,) int32 arrival lanes; valid: (A,) bool (invalid lanes
+    are padding or, under sharding, another shard's arrivals).
+    Returns (q_ids', q_len', admitted (A,) bool) — identical to
+    processing the lanes sequentially in order."""
+    c, q = q_ids.shape
+    out = pl.pallas_call(
+        functools.partial(_queue_admit_kernel, q=q),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((c, q), lambda i: (0, 0)),
+                  pl.BlockSpec((c,), lambda i: (0,)),
+                  pl.BlockSpec((c,), lambda i: (0,)),
+                  pl.BlockSpec(rid.shape, lambda i: (0,)),
+                  pl.BlockSpec(rid.shape, lambda i: (0,)),
+                  pl.BlockSpec(rid.shape, lambda i: (0,))],
+        out_specs=[pl.BlockSpec((c, q), lambda i: (0, 0)),
+                   pl.BlockSpec((c,), lambda i: (0,)),
+                   pl.BlockSpec(rid.shape, lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((c, q), jnp.int32),
+                   jax.ShapeDtypeStruct((c,), jnp.int32),
+                   jax.ShapeDtypeStruct(rid.shape, jnp.bool_)],
+        interpret=INTERPRET if interpret is None else interpret,
+    )(q_ids, q_head, q_len, jnp.asarray(rid, jnp.int32),
+      jnp.asarray(cell, jnp.int32), valid)
+    return tuple(out)
+
+
+# ----------------------------------------------------------- references
+def group_occupancy_lax(own, groups, num_segments: int | None = None
+                        ) -> jnp.ndarray:
+    """The unfused lax reference: segment_sum + gather (the parity
+    baseline, and the building block of the sharded psum path)."""
+    groups = jnp.asarray(groups)
+    n = groups.shape[0] if num_segments is None else num_segments
+    totals = jax.ops.segment_sum(own, groups, num_segments=n)
+    return totals[groups]
+
+
+def queue_admit_lax(q_ids, q_head, q_len, rid, cell, valid):
+    """Sequential lax reference of :func:`queue_admit_pallas` — the
+    engine's original per-lane ``fori_loop`` semantics."""
+    q = q_ids.shape[1]
+    a = rid.shape[0]
+    adm = jnp.zeros((a,), bool)
+
+    def body(i, acc):
+        q_ids, q_len, adm = acc
+        c = jnp.maximum(cell[i], 0)
+        ok = valid[i] & (q_len[c] < q)
+        pos = (q_head[c] + q_len[c]) % q
+        q_ids = q_ids.at[c, pos].set(jnp.where(ok, rid[i], q_ids[c, pos]))
+        q_len = q_len.at[c].add(ok.astype(jnp.int32))
+        return q_ids, q_len, adm.at[i].set(ok)
+
+    return jax.lax.fori_loop(0, a, body, (q_ids, q_len, adm))

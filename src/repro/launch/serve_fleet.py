@@ -7,7 +7,7 @@
         [--telemetry] [--window-ms 1000] \
         [--trace-out trace.jsonl] [--trace-sample 1.0] \
         [--live] [--live-out live.ndjson] [--slo-target 0.9] \
-        [--canary other.bundle.msgpack] \
+        [--canary other.bundle.msgpack] [--mesh-cells N] \
         [--round-replay] [--out serve.json]
 
 This module is a thin shell over ``repro.serve``: it loads a
@@ -71,6 +71,7 @@ from repro.policy.api import Policy
 from repro.policy.bundle import load_bundle, policy_from_bundle
 from repro.serve import (ServeConfig, poisson_request_stream, serve_stream)
 from repro.serve.engine import TEL_COUNTERS, TEL_GAUGES
+from repro.sharding.runtime import cells_mesh, set_mesh_info
 from repro.telemetry import (BurnRateAlerter, BurnRateConfig, LiveEmitter,
                              build_trace, canary_diff, open_sink,
                              render_canary, write_trace)
@@ -112,7 +113,7 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
                  trace_out: str = None, trace_sample: float = 1.0,
                  live: bool = False, live_out: str = None,
                  slo_target: float = 0.9, canary: str = None,
-                 round_replay: bool = False,
+                 round_replay: bool = False, mesh_cells: int = 0,
                  verbose: bool = True) -> dict:
     """Load a PolicyBundle, build a held-out random fleet at the bundle's
     (spec, n_max), and serve ``rounds`` round-durations' worth of Poisson
@@ -134,6 +135,23 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
     if round_replay and canary:
         raise SystemExit("--canary is a request-level feature; drop "
                          "--round-replay to use it")
+    mesh = None
+    if mesh_cells:
+        if round_replay:
+            raise SystemExit("--mesh-cells shards the request-level "
+                             "engine; drop --round-replay to use it")
+        if live:
+            raise SystemExit("--live (io_callback) is not supported "
+                             "under a cells mesh; drop --mesh-cells or "
+                             "--live")
+        if cells % mesh_cells:
+            raise SystemExit(f"--cells {cells} must divide evenly over "
+                             f"--mesh-cells {mesh_cells}")
+        try:
+            mesh = cells_mesh(mesh_cells)
+        except ValueError as e:
+            raise SystemExit(str(e))
+        set_mesh_info(mesh)  # register for any nested serve_stream calls
     bundle = load_bundle(bundle_path)
     meta = bundle.meta
     k_fleet, k_trace, k_serve, k_guard = jax.random.split(
@@ -156,7 +174,7 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
                   telemetry=telemetry, window_ms=window_ms,
                   trace_sample=trace_sample, round_replay=round_replay,
                   live=live, live_out=live_out, slo_target=slo_target,
-                  canary=canary,
+                  canary=canary, mesh_cells=mesh_cells,
                   obs_spec=bundle.obs_spec, n_max=bundle.n_max,
                   **couplings)
     if verbose:
@@ -215,7 +233,8 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
                 window_ms=window_ms,
                 alerter=BurnRateAlerter(BurnRateConfig(target=slo_target)))
         report = serve_stream(policy, params, scenario, stream, cfg,
-                              key=k_serve, verbose=verbose, live=emitter)
+                              key=k_serve, verbose=verbose, live=emitter,
+                              mesh=mesh)
         report["horizon_ms"] = horizon_ms
         if canary:
             c_bundle = load_bundle(canary, expect_spec=bundle.obs_spec,
@@ -226,7 +245,8 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
             else:
                 c_policy, c_params = policy_from_bundle(c_bundle)
             c_report = serve_stream(c_policy, c_params, scenario, stream,
-                                    cfg, key=k_serve, verbose=False)
+                                    cfg, key=k_serve, verbose=False,
+                                    mesh=mesh)
             report["canary"] = dict(
                 canary_diff(stream, report, c_report, window_ms),
                 bundle=canary, kind=c_bundle.kind)
@@ -310,6 +330,11 @@ def main():
                     help="second PolicyBundle to serve against the "
                          "bit-identical stream; attaches the paired "
                          "per-window diff under 'canary'")
+    ap.add_argument("--mesh-cells", type=int, default=0,
+                    help="shard_map the serving engine over an N-device "
+                         "('cells',) mesh (request-level only; --cells "
+                         "must divide by N; on CPU requires XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--round-replay", action="store_true",
                     help="compat mode: round-synchronous trace replay "
                          "with round-mean metrics vs the solver oracle")
@@ -329,7 +354,8 @@ def main():
                           live=args.live, live_out=args.live_out,
                           slo_target=args.slo_target,
                           canary=args.canary,
-                          round_replay=args.round_replay)
+                          round_replay=args.round_replay,
+                          mesh_cells=args.mesh_cells)
     if args.out:
         report.pop("records", None)  # raw numpy arrays, not JSON
         with open(args.out, "w") as f:

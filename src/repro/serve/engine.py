@@ -50,17 +50,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import io_callback
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.fleet import latency
 from repro.fleet.env import FleetConfig, FleetState, make_fleet_env
 from repro.fleet.workload import FleetScenario
+from repro.kernels.orchestration import queue_admit_lax, queue_admit_pallas
 from repro.policy.api import (Policy, act_batch, refresh_params,
                               require_jittable)
 from repro.serve.metrics import request_report
 from repro.serve.stream import RequestStream
+from repro.sharding.runtime import CELLS_AXIS, get_mesh_info
 from repro.telemetry.metrics import (MetricBuffer, buffer_series,
-                                     count_event, metrics_init,
-                                     observe_values, set_gauge, window_of)
+                                     count_event, merge_shard_buffers,
+                                     metrics_init, observe_values,
+                                     set_gauge, window_of)
 
 # per-window counters and gauges the engine's telemetry records; counters
 # scatter-add per tick, gauges keep the last (= window-end) snapshot
@@ -97,16 +102,24 @@ class ServeConfig:
     def round_ms(self) -> float:
         return self.n_max * self.tick_ms
 
-    def fleet(self) -> FleetConfig:
+    def fleet(self, cell_axis: Optional[str] = None,
+              cell_axis_size: int = 1) -> FleetConfig:
         return FleetConfig(n_max=self.n_max, obs_spec=self.obs_spec,
                            quiet=self.quiet,
                            shared_cloud=self.shared_cloud,
-                           shared_edge=self.shared_edge)
+                           shared_edge=self.shared_edge,
+                           cell_axis=cell_axis,
+                           cell_axis_size=cell_axis_size)
 
 
 class RequestRecords(NamedTuple):
-    """Per-request outcome arrays, length N+1 — slot N is the scatter
-    scratch for padded lanes and is sliced off before reporting."""
+    """Per-request outcome arrays, shape (S, N+1) — S is the mesh
+    cell-shard count (1 off-mesh): every shard scatters into its own
+    copy (a request is written by exactly one shard, the one serving its
+    cell), and ``serve_stream`` merges the copies once at run end
+    (floats sum, flags any, actions max).  Slot N is the scatter scratch
+    for padded lanes; both it and the shard axis are gone by reporting
+    time."""
     wait_ms: jnp.ndarray     # queueing delay: round start − arrival
     service_ms: jnp.ndarray  # response time of this request's slot
     art_ms: jnp.ndarray      # its round's ART (round-replay-compatible)
@@ -133,26 +146,70 @@ class EngineState(NamedTuple):
 class ServeEngine(NamedTuple):
     """``init(key, scenario, n_requests)`` and the jitted
     ``run_epoch(params, scenario, state, tick_ids, tick_now, stream_t,
-    stream_cell) -> (state', n_decisions)``."""
+    stream_cell) -> (state', n_decisions)``.  ``n_shards`` is the cells-
+    mesh size the epoch step is shard_mapped over (1 = single device)."""
     init: Callable
     run_epoch: Callable
     cfg: ServeConfig
+    n_shards: int = 1
 
 
 def make_serve_engine(policy: Policy, cfg: ServeConfig,
-                      live=None) -> ServeEngine:
+                      live=None, mesh: Optional[Mesh] = None) -> ServeEngine:
     """``live`` is an optional ``repro.telemetry.LiveEmitter``; when set
     (requires ``cfg.telemetry``) the tick scan reports each closed
     metric window to the host through ``io_callback`` — windowed series
     stream out as NDJSON *while* the jitted epoch runs.  ``live=None``
-    leaves the compiled program exactly as before."""
+    leaves the compiled program exactly as before.
+
+    ``mesh`` is an optional one-axis ``("cells",)`` mesh (see
+    ``repro.sharding.runtime.cells_mesh``): the epoch step is then
+    ``shard_map``-ped over it — each device owns ``C / S`` cells' queues,
+    env state, and record/telemetry copies, and only the cross-cell
+    couplings (shared-cloud occupancy, edge-group occupancy, fleet load
+    aggregates) and the decision count cross shards, via ``psum``.
+    Because the env keys background draws by *global* cell id and the
+    PRNG key is replicated, the sharded engine is numerically identical
+    to the single-device one for deterministic-per-cell policies (the
+    parity tests enforce 1e-5 on records, telemetry, and report
+    figures).  ``init`` always takes the *global* scenario; ``run_epoch``
+    accepts global arrays and lets jit shard them per its specs.
+    ``live`` is host-callback-based and is not supported under a mesh."""
     require_jittable(policy, "the request-level serving engine")
     if live is not None and not cfg.telemetry:
         raise ValueError("live streaming requires ServeConfig.telemetry "
                          "(the window series it exports)")
-    env = make_fleet_env(cfg.fleet())
+    sharded = mesh is not None
+    if sharded:
+        if CELLS_AXIS not in mesh.axis_names:
+            raise ValueError(f"serve mesh must carry a {CELLS_AXIS!r} "
+                             f"axis, got {mesh.axis_names}")
+        if live is not None:
+            raise ValueError("live streaming (io_callback) is not "
+                             "supported under a cells mesh — run the "
+                             "live serve single-device")
+    S = int(mesh.shape[CELLS_AXIS]) if sharded else 1
+    env = make_fleet_env(cfg.fleet(CELLS_AXIS if sharded else None, S))
+    # init runs outside shard_map (no axis to query): a mesh-free twin
+    # env builds the global initial state; its background draws match the
+    # sharded env's exactly because both key draws by global cell id
+    env_init = make_fleet_env(cfg.fleet()) if sharded else env
     n_max, Q = cfg.n_max, cfg.queue_cap
     slot = jnp.arange(n_max)
+
+    def _expand_tel(tel: MetricBuffer) -> MetricBuffer:
+        return MetricBuffer(edges=tel.edges, hist=tel.hist[None],
+                            counters={n: v[None]
+                                      for n, v in tel.counters.items()},
+                            gauges={n: v[None]
+                                    for n, v in tel.gauges.items()})
+
+    def _squeeze_tel(tel: MetricBuffer) -> MetricBuffer:
+        return MetricBuffer(edges=tel.edges, hist=tel.hist[0],
+                            counters={n: v[0]
+                                      for n, v in tel.counters.items()},
+                            gauges={n: v[0]
+                                    for n, v in tel.gauges.items()})
 
     def init(key, scenario: FleetScenario, n_requests: int,
              n_windows: int = 1) -> EngineState:
@@ -160,11 +217,19 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig,
         k_env, key = jax.random.split(key)
         # distinct buffers per field: the donated epoch step may not
         # receive the same buffer aliased across record arrays
-        zf = lambda: jnp.zeros((n_requests + 1,), jnp.float32)
-        zb = lambda: jnp.zeros((n_requests + 1,), bool)
-        zi = jnp.full((n_requests + 1,), -1, jnp.int32)
+        zf = lambda: jnp.zeros((S, n_requests + 1), jnp.float32)
+        zb = lambda: jnp.zeros((S, n_requests + 1), bool)
+        zi = jnp.full((S, n_requests + 1), -1, jnp.int32)
+        tel = None
+        if cfg.telemetry:
+            t0 = metrics_init(n_windows, TEL_COUNTERS, TEL_GAUGES)
+            tile = lambda x: jnp.tile(x[None], (S,) + (1,) * x.ndim)
+            tel = MetricBuffer(
+                edges=t0.edges, hist=tile(t0.hist),
+                counters={n: tile(v) for n, v in t0.counters.items()},
+                gauges={n: tile(v) for n, v in t0.gauges.items()})
         return EngineState(
-            env=env.init(k_env, scenario),
+            env=env_init.init(k_env, scenario),
             key=key,
             q_ids=jnp.full((C, Q), -1, jnp.int32),
             q_head=jnp.zeros((C,), jnp.int32),
@@ -173,48 +238,61 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig,
             cur_ids=jnp.full((C, n_max), -1, jnp.int32),
             round_start=jnp.zeros((C,), jnp.float32),
             rec=RequestRecords(zf(), zf(), zf(), zb(), zb(), zb(), zi),
-            tel=(metrics_init(n_windows, TEL_COUNTERS, TEL_GAUGES)
-                 if cfg.telemetry else None))
+            tel=tel)
 
-    def run_epoch(params, scenario: FleetScenario, state: EngineState,
-                  tick_ids, tick_now, tick_live, stream_t, stream_cell,
-                  stream_slo):
+    def run_epoch_body(params, scenario: FleetScenario, state: EngineState,
+                       tick_ids, tick_now, tick_live, stream_t,
+                       stream_cell, stream_slo):
         """One epoch = a jitted scan over its ticks.  ``tick_ids`` is
-        (T_e, A) int32 — the ids arriving at each tick, -1-padded to the
-        trace's max per-tick burst; ``tick_now`` (T_e,) float32 is each
-        tick's wall-clock time; ``tick_live`` (T_e,) bool marks real
-        serving ticks — epoch-padding ticks are inert (``lax.cond``
-        skips them entirely) so the serving window is a function of the
-        stream horizon alone, never of the epoch split.
-        ``stream_t``/``stream_cell`` are the (N+1,)-padded per-request
-        arrays.  Returns the advanced state and the number of real
-        (non-idle) request decisions issued."""
+        (T_e, S, A) int32 — the ids arriving at each (tick, cell-shard),
+        -1-padded to the trace's max per-tick-per-shard burst;
+        ``tick_now`` (T_e,) float32 is each tick's wall-clock time;
+        ``tick_live`` (T_e,) bool marks real serving ticks —
+        epoch-padding ticks are inert (``lax.cond`` skips them entirely)
+        so the serving window is a function of the stream horizon alone,
+        never of the epoch split.  ``stream_t``/``stream_cell`` are the
+        (N+1,)-padded per-request arrays (replicated under sharding).
+        Returns the advanced state and the number of real (non-idle)
+        request decisions issued, summed across shards.
+
+        Inside ``shard_map`` every array is this shard's block: the
+        scenario and queues are its C/S cells, ``tick_ids`` its (T_e, 1,
+        A) arrival rows, and the record/telemetry copies its (1, N+1) /
+        (1, W) slices — squeezed here, re-expanded on return."""
         scratch = stream_t.shape[0] - 1  # slot N: padded-lane scatter sink
+        # global id of this shard's first cell: local queue index =
+        # stream cell id - cell0
+        if sharded:
+            cell0 = jax.lax.axis_index(CELLS_AXIS) * scenario.n_cells
+        else:
+            cell0 = jnp.int32(0)
+        # Scenario-borne params (greedy's per-cell constraint, guarded
+        # combinators' targets) are re-derived *here*, against this
+        # shard's scenario block, so they arrive correctly sharded no
+        # matter what shape the caller's (replicated) params carry.
+        # Idempotent: refresh rebinds scenario-derived entries and keeps
+        # learned weights, so the single-device program is unchanged.
+        params = refresh_params(policy, params, scenario)
 
         def live_tick(st, ids, now):
 
             # -- 1. admit this tick's arrivals into the per-cell rings --
-            def admit(i, acc):
-                q_ids, q_len, dropped, n_adm, n_drop = acc
-                rid = ids[i]
-                valid = rid >= 0
-                c = jnp.where(valid, stream_cell[jnp.maximum(rid, 0)], 0)
-                room = q_len[c] < Q
-                ok = valid & room
-                pos = (st.q_head[c] + q_len[c]) % Q
-                q_ids = q_ids.at[c, pos].set(
-                    jnp.where(ok, rid, q_ids[c, pos]))
-                q_len = q_len.at[c].add(ok.astype(jnp.int32))
-                dropped = dropped.at[
-                    jnp.where(valid & ~room, rid, scratch)].set(True)
-                return (q_ids, q_len, dropped,
-                        n_adm + ok.astype(jnp.int32),
-                        n_drop + (valid & ~room).astype(jnp.int32))
-
-            q_ids, q_len, dropped, n_adm, n_drop = jax.lax.fori_loop(
-                0, ids.shape[0], admit,
-                (st.q_ids, st.q_len, st.rec.dropped,
-                 jnp.int32(0), jnp.int32(0)))
+            # one fused ring-scatter kernel per tick (rank-based closed
+            # form of the old sequential per-lane fori_loop; the lax
+            # reference *is* that loop, parity-tested).  The bucketer
+            # routes each arrival to its cell's shard, so valid lanes
+            # are always local here.
+            valid = ids >= 0
+            c_loc = stream_cell[jnp.maximum(ids, 0)] - cell0
+            admit_fn = (queue_admit_pallas if latency.USE_KERNELS
+                        else queue_admit_lax)
+            q_ids, q_len, admitted = admit_fn(
+                st.q_ids, st.q_head, st.q_len, ids, c_loc, valid)
+            rejected = valid & ~admitted
+            dropped = st.rec.dropped.at[
+                jnp.where(rejected, ids, scratch)].set(True)
+            n_adm = admitted.sum().astype(jnp.int32)
+            n_drop = rejected.sum().astype(jnp.int32)
 
             # -- 2. form rounds at idle cells with backlog --
             start = (st.cur_n == 0) & (q_len > 0)
@@ -323,24 +401,60 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig,
                 lambda s: (s, jnp.int32(0)),
                 st)
 
-        state, n_act = jax.lax.scan(
-            tick, state, (tick_ids, tick_now, tick_live))
-        return state, n_act.sum()
+        st0 = state._replace(
+            rec=jax.tree.map(lambda x: x[0], state.rec),
+            tel=(_squeeze_tel(state.tel) if cfg.telemetry else None))
+        st1, n_act = jax.lax.scan(
+            tick, st0, (tick_ids[:, 0], tick_now, tick_live))
+        n = n_act.sum()
+        if sharded:
+            n = jax.lax.psum(n, CELLS_AXIS)
+        st1 = st1._replace(
+            rec=jax.tree.map(lambda x: x[None], st1.rec),
+            tel=(_expand_tel(st1.tel) if cfg.telemetry else None))
+        return st1, n
+
+    if sharded:
+        Pc = P(CELLS_AXIS)
+        # pytree-prefix specs: a bare spec at a subtree position covers
+        # all its leaves.  Replicated: params, PRNG keys, the stream
+        # arrays, tick times, histogram edges.  Sharded over cells: the
+        # scenario, queues, env state, and the per-shard record /
+        # telemetry copies (their leading S axis *is* the mesh axis).
+        state_spec = EngineState(
+            env=FleetState(key=P(), actions=Pc, user=Pc, charged=Pc,
+                           bg=Pc),
+            key=P(), q_ids=Pc, q_head=Pc, q_len=Pc, cur_n=Pc,
+            cur_ids=Pc, round_start=Pc, rec=Pc,
+            tel=(MetricBuffer(edges=P(), hist=Pc, counters=Pc, gauges=Pc)
+                 if cfg.telemetry else None))
+        run_epoch = shard_map(
+            run_epoch_body, mesh=mesh,
+            in_specs=(P(), Pc, state_spec, P(None, CELLS_AXIS),
+                      P(), P(), P(), P(), P()),
+            out_specs=(state_spec, P()),
+            check_rep=False)
+    else:
+        run_epoch = run_epoch_body
 
     # the engine state (queues, records, telemetry accumulators) is
     # donated: each epoch's buffers are reused in place on backends that
     # support donation instead of being copied every chunk
     return ServeEngine(init=init,
                        run_epoch=jax.jit(run_epoch, donate_argnums=(2,)),
-                       cfg=cfg)
+                       cfg=cfg, n_shards=S)
 
 
 def _tick_buckets(stream: RequestStream, tick_ms: float,
-                  ticks_per_epoch: int):
+                  ticks_per_epoch: int, n_shards: int = 1):
     """Host-side admission schedule: bucket request ids by the first tick
-    whose wall clock reaches their arrival time.  Returns (T, A) -1-padded
-    id rows, the (T,) tick times, the (T,) live-tick mask, and the epoch
-    count.
+    whose wall clock reaches their arrival time, and — under a cells
+    mesh — by the shard owning their cell (shard ``s`` holds cells
+    ``[s·C/S, (s+1)·C/S)``, matching the mesh's block partition of the
+    scenario).  Returns (T, S, A) -1-padded id rows (A = the max
+    per-tick-per-shard burst; within a row ids stay in arrival order, so
+    per-cell FIFO admission order is shard-invariant), the (T,) tick
+    times, the (T,) live-tick mask, and the epoch count.
 
     The serving window is a function of the horizon alone: the
     ``n_ticks = ceil(horizon/tick) + 1`` live ticks cover every arrival
@@ -356,14 +470,17 @@ def _tick_buckets(stream: RequestStream, tick_ms: float,
     tick_of = np.ceil(np.asarray(stream.t_ms, np.float64)
                       / tick_ms).astype(np.int64)
     ok = tick_of < n_ticks
-    counts = np.bincount(tick_of[ok], minlength=T)
+    shard_of = (np.asarray(stream.cell, np.int64)
+                // (stream.n_cells // n_shards))
+    counts = np.bincount((tick_of * n_shards + shard_of)[ok],
+                         minlength=T * n_shards)
     A = max(1, int(counts.max()) if counts.size else 1)
-    ids = np.full((T, A), -1, np.int32)
-    cursor = np.zeros(T, np.int64)
+    ids = np.full((T, n_shards, A), -1, np.int32)
+    cursor = np.zeros((T, n_shards), np.int64)
     for i in np.nonzero(ok)[0]:
-        t = tick_of[i]
-        ids[t, cursor[t]] = i
-        cursor[t] += 1
+        t, s = tick_of[i], shard_of[i]
+        ids[t, s, cursor[t, s]] = i
+        cursor[t, s] += 1
     now = (np.arange(T, dtype=np.float64) * tick_ms).astype(np.float32)
     live = np.arange(T) < n_ticks
     return ids, now, live, n_epochs
@@ -372,7 +489,8 @@ def _tick_buckets(stream: RequestStream, tick_ms: float,
 def serve_stream(policy: Policy, params, scenario: FleetScenario,
                  stream: RequestStream, cfg: ServeConfig, *, key=None,
                  on_epoch: Optional[Callable] = None,
-                 live=None, verbose: bool = False) -> dict:
+                 live=None, verbose: bool = False,
+                 mesh: Optional[Mesh] = None) -> dict:
     """Serve a :class:`RequestStream` end to end.  Returns the per-request
     report of ``repro.serve.metrics.request_report`` plus engine timing
     (steady-state = excluding the compile-bearing first epoch):
@@ -392,15 +510,31 @@ def serve_stream(policy: Policy, params, scenario: FleetScenario,
     ``cfg.telemetry``) streams each closed metric window as NDJSON from
     inside the jitted tick scan, writes an ``epoch`` progress record at
     every chunk boundary, and is flushed (final window + run summary)
-    before this function returns."""
+    before this function returns.
+
+    ``mesh`` shard_maps the engine over a ``("cells",)`` mesh (see
+    ``make_serve_engine``); ``mesh=None`` picks up a cells mesh from the
+    ``repro.sharding.runtime`` registry when one is set, else runs
+    single-device.  The cell count must divide evenly across the mesh.
+    Per-shard record and telemetry copies are merged here before
+    reporting, so the returned report is shard-count-invariant (and
+    ``report["mesh_cells"]`` records the shard count used)."""
     if scenario.n_cells != stream.n_cells:
         raise ValueError(f"stream built for {stream.n_cells} cells, "
                          f"scenario has {scenario.n_cells}")
+    if mesh is None:
+        mi = get_mesh_info()
+        if mi is not None and mi.cells_axis is not None:
+            mesh = mi.mesh
+    S = int(mesh.shape[CELLS_AXIS]) if mesh is not None else 1
+    if scenario.n_cells % S:
+        raise ValueError(f"{scenario.n_cells} cells do not divide over "
+                         f"the {S}-way {CELLS_AXIS!r} mesh")
     key = jax.random.PRNGKey(0) if key is None else key
-    engine = make_serve_engine(policy, cfg, live=live)
+    engine = make_serve_engine(policy, cfg, live=live, mesh=mesh)
     ticks_per_epoch = max(1, int(round(stream.epoch_ms / cfg.tick_ms)))
     ids, now, live_ticks, n_epochs = _tick_buckets(
-        stream, cfg.tick_ms, ticks_per_epoch)
+        stream, cfg.tick_ms, ticks_per_epoch, n_shards=S)
     N = stream.n_requests
     n_ticks = int(live_ticks.sum())
     stream_t = jnp.asarray(np.append(stream.t_ms, 0.0), jnp.float32)
@@ -431,22 +565,34 @@ def serve_stream(policy: Policy, params, scenario: FleetScenario,
         else:
             compile_wall = dt
         if verbose or live is not None:
-            done = int(np.asarray(state.rec.served)[:N].sum())
+            done = int(np.asarray(state.rec.served)[:, :N].any(0).sum())
             backlog = int(np.asarray(state.q_len).sum())
             if live is not None:
                 live.epoch(e, ticks=hi - lo, served=done, n_requests=N,
                            backlog=backlog,
                            dropped=int(np.asarray(
-                               state.rec.dropped)[:N].sum()),
+                               state.rec.dropped)[:, :N].any(0).sum()),
                            wall_s=round(dt, 4))
             if verbose:
                 print(f"  epoch {e:3d}: ticks [{lo}, {hi}), "
                       f"{done:6d}/{N} requests served, "
                       f"backlog {backlog}")
 
-    records = {k: np.asarray(v)[:N] for k, v in
+    # merge the per-shard record copies: each request has exactly one
+    # writer (its cell's shard), so floats sum over the zero-initialized
+    # copies, flags or together, and actions (init -1) take the max
+    def _merge_rec(name, v):
+        v = np.asarray(v)
+        if v.dtype == np.bool_:
+            return v.any(axis=0)
+        if name == "action":
+            return v.max(axis=0)
+        return v.sum(axis=0)
+
+    records = {k: _merge_rec(k, v)[:N] for k, v in
                state.rec._asdict().items()}
     report = request_report(stream, records)
+    report["mesh_cells"] = S
     report["n_epochs"] = n_epochs
     report["n_ticks"] = n_ticks
     report["tick_ms"] = cfg.tick_ms
@@ -461,7 +607,11 @@ def serve_stream(policy: Policy, params, scenario: FleetScenario,
                                         if active and wall > 0 else None)
     report["records"] = records
     if cfg.telemetry:
-        report["telemetry"] = telemetry_report(state.tel, cfg.window_ms)
+        # shards partition the cells, so counters/histogram sum; gauges
+        # are extensive totals except queue_depth, a per-cell mean
+        tel = merge_shard_buffers(state.tel,
+                                  gauge_reduce={"queue_depth": "mean"})
+        report["telemetry"] = telemetry_report(tel, cfg.window_ms)
         if live is not None:
             live.finish(report["telemetry"])
     return report

@@ -30,7 +30,8 @@ from repro.telemetry.metrics import (MetricBuffer, metrics_init,
                                      count_event, set_gauge,
                                      observe_values, buffer_series,
                                      histogram_percentile,
-                                     histogram_percentiles)
+                                     histogram_percentiles,
+                                     merge_shard_buffers)
 from repro.telemetry.trace import (build_trace, write_trace, read_trace,
                                    validate_trace)
 from repro.telemetry.profiling import Profile, profiled
@@ -44,7 +45,7 @@ from repro.telemetry.canary import canary_diff, render_canary
 __all__ = [
     "MetricBuffer", "metrics_init", "count_event", "set_gauge",
     "observe_values", "buffer_series", "histogram_percentile",
-    "histogram_percentiles",
+    "histogram_percentiles", "merge_shard_buffers",
     "build_trace", "write_trace", "read_trace", "validate_trace",
     "Profile", "profiled",
     "NdjsonSink", "open_sink", "BurnRateConfig", "BurnRateAlerter",

@@ -104,6 +104,37 @@ def observe_values(buf: MetricBuffer, values, mask=None) -> MetricBuffer:
     return buf._replace(hist=buf.hist.at[idx].add(add))
 
 
+def merge_shard_buffers(buf: MetricBuffer, gauge_reduce=None) -> MetricBuffer:
+    """Collapse a buffer whose every leaf (except ``edges``) carries a
+    leading shard axis — the shape the sharded serve engine materializes,
+    one per-shard copy per mesh cell-shard — into one global buffer.
+
+    Counters and the histogram are counts: shards partition the events,
+    so they sum.  Gauges need per-name semantics, supplied by
+    ``gauge_reduce[name] -> "sum" | "mean"`` (default "sum"): extensive
+    gauges (backlog, inflight, per-tier occupancy totals) sum across
+    shards; intensive ones (mean queue depth over cells) average —
+    exact because shards hold equally many cells.  A window where *no*
+    shard wrote (all-NaN) stays NaN; shards that wrote are reduced with
+    the NaN-ignoring reductions.
+    """
+    gauge_reduce = gauge_reduce or {}
+
+    def _gauge(name, v):
+        v = jnp.asarray(v)
+        all_nan = jnp.isnan(v).all(axis=0)
+        red = (jnp.nanmean if gauge_reduce.get(name, "sum") == "mean"
+               else jnp.nansum)
+        return jnp.where(all_nan, jnp.nan, red(v, axis=0))
+
+    return MetricBuffer(
+        edges=buf.edges,
+        hist=jnp.asarray(buf.hist).sum(axis=0),
+        counters={n: jnp.asarray(v).sum(axis=0)
+                  for n, v in buf.counters.items()},
+        gauges={n: _gauge(n, v) for n, v in buf.gauges.items()})
+
+
 # ------------------------------------------------------------- host side
 def histogram_percentile(hist, edges, p: float) -> float | None:
     """Nearest-rank percentile from histogram counts: the value of the

@@ -1,0 +1,288 @@
+"""Sharded serving: shard_map over the ``cells`` axis must be invisible.
+
+Acceptance contract of the cell-sharded engine:
+  * a one-device cells mesh reproduces the mesh-free engine to 1e-5 on
+    per-request records, report figures, and telemetry window series —
+    for the greedy baseline AND an untrained DQN, with both cross-cell
+    couplings (shared cloud, shared edge groups) switched on — and the
+    telemetry invariant audit passes on the sharded report
+  * an 8-way forced-host-device mesh does the same (subprocess: the
+    XLA_FLAGS device-count override must precede jax init)
+  * misuse fails loudly: meshes without a ``cells`` axis, live streaming
+    under a mesh, fleets that do not divide over the mesh
+  * ``MeshInfo`` carries the new axis without disturbing the seed LM
+    dp/tp detection, and ``serve_stream`` picks a registered cells mesh
+    up from the sharding runtime registry
+  * ``merge_shard_buffers`` reduces per-shard MetricBuffer copies with
+    per-name gauge semantics (sum vs mean) and NaN-safe windows
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fleet import FleetConfig, random_fleet
+from repro.policy import dqn_policy, heuristic_greedy_policy
+from repro.serve import ServeConfig, poisson_request_stream, serve_stream
+from repro.serve.engine import make_serve_engine
+from repro.sharding.runtime import (CELLS_AXIS, cells_mesh, get_mesh_info,
+                                    set_mesh_info)
+from repro.telemetry import (MetricBuffer, audit_serve_report, build_trace,
+                             merge_shard_buffers)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+N_MAX = 4
+CELLS = 16
+
+
+def _case(seed=11, rate=2.5, rounds=6):
+    """A coupled serving case: non-singleton edge groups + both shared
+    couplings on, telemetry threaded through the tick scan."""
+    scfg = ServeConfig(n_max=N_MAX, shared_cloud=True, shared_edge=True,
+                       telemetry=True)
+    scn = random_fleet(jax.random.PRNGKey(seed), CELLS, n_max=N_MAX,
+                       cells_per_edge=4)
+    horizon = rounds * scfg.round_ms
+    stream = poisson_request_stream(jax.random.PRNGKey(seed + 1), scn,
+                                    horizon, rate=rate,
+                                    round_ms=scfg.round_ms,
+                                    epoch_ms=horizon / 3)
+    return scn, stream, scfg
+
+
+def _assert_reports_match(r1, r2, tol=1e-5):
+    # figures: everything scalar except wall-clock timings and the mesh
+    # stamp itself
+    skip = {"mesh_cells", "compile_time_s", "run_time_s",
+            "decisions_per_s", "active_decisions_per_s"}
+    for k, v in r1.items():
+        if k in skip or not isinstance(v, (int, float, type(None))):
+            continue
+        w = r2[k]
+        if v is None or w is None:
+            assert v == w, k
+        else:
+            assert abs(v - w) <= tol * max(1.0, abs(v)), (k, v, w)
+    for k, v in r1["records"].items():
+        np.testing.assert_allclose(
+            np.asarray(v, np.float64), np.asarray(r2["records"][k],
+                                                  np.float64),
+            atol=tol, err_msg=f"records[{k}]")
+    t1, t2 = r1["telemetry"], r2["telemetry"]
+    np.testing.assert_array_equal(t1["latency_hist"], t2["latency_hist"])
+    for name, s in t1["series"].items():
+        a = np.asarray([np.nan if x is None else x for x in s], np.float64)
+        b = np.asarray([np.nan if x is None else x
+                        for x in t2["series"][name]], np.float64)
+        np.testing.assert_allclose(a, b, atol=tol, err_msg=name)
+
+
+@pytest.mark.parametrize("kind", ["greedy", "dqn"])
+def test_one_device_mesh_parity(kind):
+    cfg = FleetConfig(n_max=N_MAX)
+    if kind == "greedy":
+        pol = heuristic_greedy_policy(cfg.spec())
+        params = pol.init(jax.random.PRNGKey(0))
+    else:
+        pol = dqn_policy(cfg.spec(), hidden=(16,))
+        params = pol.init(jax.random.PRNGKey(5))
+    scn, stream, scfg = _case()
+    key = jax.random.PRNGKey(7)
+    r1 = serve_stream(pol, params, scn, stream, scfg, key=key)
+    rm = serve_stream(pol, params, scn, stream, scfg, key=key,
+                      mesh=cells_mesh(1))
+    assert r1["mesh_cells"] == 1 and rm["mesh_cells"] == 1
+    assert rm["served_requests"] > 0
+    _assert_reports_match(r1, rm)
+    # the sharded report survives the conservation-law audit
+    audit = audit_serve_report(
+        rm, trace=build_trace(stream, rm["records"], scfg.tick_ms),
+        n_cells=CELLS, n_max=N_MAX, queue_cap=scfg.queue_cap)
+    audit.raise_on_failure()
+
+
+# ------------------------------------------------- multi-device parity
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.fleet import FleetConfig, random_fleet
+from repro.policy import dqn_policy, heuristic_greedy_policy
+from repro.serve import ServeConfig, poisson_request_stream, serve_stream
+from repro.sharding.runtime import cells_mesh, set_mesh_info
+from repro.telemetry import audit_serve_report, build_trace
+
+n_max, cells = 4, 32
+cfg = FleetConfig(n_max=n_max)
+scfg = ServeConfig(n_max=n_max, shared_cloud=True, shared_edge=True,
+                   telemetry=True)
+scn = random_fleet(jax.random.PRNGKey(11), cells, n_max=n_max,
+                   cells_per_edge=4)
+horizon = 6 * scfg.round_ms
+stream = poisson_request_stream(jax.random.PRNGKey(12), scn, horizon,
+                                rate=2.5, round_ms=scfg.round_ms,
+                                epoch_ms=horizon / 3)
+pols = {"greedy": heuristic_greedy_policy(cfg.spec()),
+        "dqn": dqn_policy(cfg.spec(), hidden=(16,))}
+mesh = cells_mesh()
+assert mesh.shape["cells"] == 8
+for name, pol in pols.items():
+    params = pol.init(jax.random.PRNGKey(5))
+    key = jax.random.PRNGKey(7)
+    r1 = serve_stream(pol, params, scn, stream, scfg, key=key)
+    r8 = serve_stream(pol, params, scn, stream, scfg, key=key, mesh=mesh)
+    assert r8["mesh_cells"] == 8
+    assert r8["served_requests"] == r1["served_requests"] > 0
+    d = max(float(np.abs(np.asarray(r1["records"][f], np.float64)
+                         - np.asarray(r8["records"][f],
+                                      np.float64)).max())
+            for f in r1["records"])
+    assert d <= 1e-5, (name, d)
+    for fig in ("p99_latency_ms", "slo_attainment", "violation_rate",
+                "dropped_requests", "deferred_requests"):
+        a, b = r1[fig], r8[fig]
+        assert (a is None) == (b is None), fig
+        if a is not None:
+            assert abs(a - b) <= 1e-5 * max(1.0, abs(a)), (name, fig, a, b)
+    np.testing.assert_array_equal(r1["telemetry"]["latency_hist"],
+                                  r8["telemetry"]["latency_hist"])
+    for sname, s in r1["telemetry"]["series"].items():
+        a = np.asarray([np.nan if x is None else x for x in s])
+        b = np.asarray([np.nan if x is None else x
+                        for x in r8["telemetry"]["series"][sname]])
+        np.testing.assert_allclose(a, b, atol=1e-5, err_msg=sname)
+    audit_serve_report(
+        r8, trace=build_trace(stream, r8["records"], scfg.tick_ms),
+        n_cells=cells, n_max=n_max,
+        queue_cap=scfg.queue_cap).raise_on_failure()
+    print(name, "OK", d)
+
+# a fleet that does not divide over the mesh fails loudly
+bad = random_fleet(jax.random.PRNGKey(1), 28, n_max=n_max)
+bs = poisson_request_stream(jax.random.PRNGKey(2), bad, 400.0, rate=1.0,
+                            round_ms=scfg.round_ms, epoch_ms=400.0)
+try:
+    serve_stream(pols["greedy"], pols["greedy"].init(jax.random.PRNGKey(0)),
+                 bad, bs, scfg, mesh=mesh)
+    raise SystemExit("divisibility not enforced")
+except ValueError as e:
+    assert "divide" in str(e)
+
+# registry pickup: a set_mesh_info-registered cells mesh is used without
+# passing mesh= explicitly
+set_mesh_info(mesh)
+try:
+    r = serve_stream(pols["greedy"],
+                     pols["greedy"].init(jax.random.PRNGKey(0)),
+                     scn, stream, scfg, key=jax.random.PRNGKey(7))
+finally:
+    set_mesh_info(None)
+assert r["mesh_cells"] == 8
+print("ALL_OK")
+"""
+
+
+def test_multi_device_parity_subprocess():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          cwd=REPO, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "ALL_OK" in proc.stdout
+
+
+# ------------------------------------------------------- loud failures
+def test_engine_rejects_mesh_without_cells_axis():
+    from jax.sharding import Mesh
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    pol = heuristic_greedy_policy(FleetConfig(n_max=N_MAX).spec())
+    with pytest.raises(ValueError, match="cells"):
+        make_serve_engine(pol, ServeConfig(n_max=N_MAX), mesh=mesh)
+
+
+def test_engine_rejects_live_under_mesh():
+    pol = heuristic_greedy_policy(FleetConfig(n_max=N_MAX).spec())
+    with pytest.raises(ValueError, match="live"):
+        make_serve_engine(pol, ServeConfig(n_max=N_MAX, telemetry=True),
+                          live=object(), mesh=cells_mesh(1))
+
+
+# -------------------------------------------------------- mesh registry
+def test_mesh_info_cells_axis():
+    set_mesh_info(None)
+    try:
+        set_mesh_info(cells_mesh(1))
+        mi = get_mesh_info()
+        assert mi.cells_axis == CELLS_AXIS
+        assert mi.cells_size == 1
+        assert mi.dp_axes == ()   # a cells mesh is not a dp/tp mesh
+    finally:
+        set_mesh_info(None)
+    assert get_mesh_info() is None
+
+
+def test_mesh_info_legacy_dp_tp_unchanged():
+    from jax.sharding import Mesh
+    set_mesh_info(None)
+    try:
+        mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        set_mesh_info(mesh)
+        mi = get_mesh_info()
+        assert mi.cells_axis is None and mi.cells_size == 1
+        assert mi.dp_axes == ("data",)
+        assert mi.tp_axis == "model"
+    finally:
+        set_mesh_info(None)
+
+
+def test_cells_mesh_too_many_devices_errors():
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        cells_mesh(jax.device_count() + 1)
+
+
+def test_serve_stream_picks_up_registry_mesh():
+    pol = heuristic_greedy_policy(FleetConfig(n_max=N_MAX).spec())
+    scn, stream, scfg = _case(rounds=2)
+    set_mesh_info(None)
+    try:
+        set_mesh_info(cells_mesh(1))
+        rep = serve_stream(pol, pol.init(jax.random.PRNGKey(0)), scn,
+                           stream, scfg, key=jax.random.PRNGKey(7))
+    finally:
+        set_mesh_info(None)
+    assert rep["mesh_cells"] == 1
+
+
+# ------------------------------------------------- merge_shard_buffers
+def test_merge_shard_buffers_semantics():
+    edges = jnp.asarray([1.0, 10.0, 100.0])
+    buf = MetricBuffer(
+        edges=edges,
+        hist=jnp.asarray([[1, 2], [3, 4]], jnp.int32),
+        counters={"served": jnp.asarray([[1, 0, 2], [0, 5, 1]],
+                                        jnp.int32)},
+        gauges={"backlog": jnp.asarray([[1.0, np.nan, 2.0],
+                                        [3.0, np.nan, np.nan]],
+                                       jnp.float32),
+                "queue_depth": jnp.asarray([[2.0, 4.0, np.nan],
+                                            [4.0, np.nan, np.nan]],
+                                           jnp.float32)})
+    out = merge_shard_buffers(buf, gauge_reduce={"queue_depth": "mean"})
+    np.testing.assert_array_equal(np.asarray(out.edges),
+                                  np.asarray(edges))
+    np.testing.assert_array_equal(np.asarray(out.hist), [4, 6])
+    np.testing.assert_array_equal(np.asarray(out.counters["served"]),
+                                  [1, 5, 3])
+    # extensive gauge sums over the shards that wrote; all-NaN stays NaN
+    got = np.asarray(out.gauges["backlog"])
+    assert got[0] == 4.0 and np.isnan(got[1]) and got[2] == 2.0
+    # intensive gauge averages over writing shards
+    got = np.asarray(out.gauges["queue_depth"])
+    assert got[0] == 3.0 and got[1] == 4.0 and np.isnan(got[2])
