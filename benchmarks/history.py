@@ -47,6 +47,10 @@ TIER1 = {
         ("sharded_request_decisions_per_s", "higher", 0.9),
         ("policies.greedy.p99_latency_ms", "lower", 0.25),
         ("policies.greedy.slo_attainment", "higher", 0.10),
+        # greedy served under the spot tier economy: deterministic given
+        # the seeds, but sensitive to routing/profile retunes — loose
+        # tolerance, gating order-of-magnitude billing bugs only
+        ("cost_per_1k_requests", "lower", 0.5),
     ],
 }
 

@@ -21,6 +21,15 @@ hltrain bundle wrapped in the ``slo_guarded`` combinator
 (``hltrain_guarded``), which trades tail latency for the greedy
 baseline's zero accuracy-violation property.
 
+A tier-economy matrix (``repro.economy``, spot profile) then serves the
+same offered load twice more — cost-oblivious greedy vs the
+cold-start-aware ``cost_greedy`` router — recording per-policy
+``cost_per_1k_requests`` / ``joules_per_request`` next to p99/SLO under
+``economy`` in the JSON, auditing the spend conservation law per run,
+and failing unless the cost-aware router is cheaper at SLO attainment
+within 0.02 of the baseline.  The greedy economy-on cost figure is
+mirrored top-level and tier-1-gated via bench history.
+
 Writes ``BENCH_serve.json`` with per-policy round-level figures
 (``violation_rate``, request-weighted ART vs optimum, ``decisions_per_s``)
 and request-level figures (``p50/p95/p99_latency_ms``, ``slo_attainment``,
@@ -51,6 +60,7 @@ import jax
 import numpy as np
 
 from benchmarks import history
+from repro.economy import builtin_profile, cost_greedy_policy
 from repro.fleet import FleetConfig, curriculum_fleets, random_fleet
 from repro.fleet.workload import poisson_round_trace
 from repro.hltrain import FleetHLParams, make_hl_trainer, run_curriculum
@@ -59,11 +69,17 @@ from repro.policy import (PolicyBundle, heuristic_greedy_policy,
                           load_bundle, policy_from_bundle, save_bundle,
                           solve_oracle)
 from repro.serve import ServeConfig, poisson_request_stream, serve_stream
+from repro.specs.observation import make_spec
 from repro.telemetry import (audit_serve_report, build_trace, profiled)
 
 N_MAX = 5
 OBS_SPEC = "full"
 TICK_MS = 50.0
+# tier-economy matrix: the spot profile exercises every state-machine
+# feature (cheap preemptible edge with a slow cold start, scale-to-zero,
+# expensive always-available cloud spill)
+ECONOMY_PROFILE = "spot"
+ECONOMY_SPEC = "full_economy"
 
 
 def train_hltrain_bundle(path: str, cells: int, hp: FleetHLParams,
@@ -197,6 +213,86 @@ def run_cells_sweep(smoke: bool, rate: float) -> dict:
         **{k: v for k, v in prof.report().items() if k != "label"},
     }
     return sweep
+
+
+def run_economy_matrix(scenario, stream, key) -> dict:
+    """Cost-oblivious greedy vs the cold-start-aware ``cost_greedy``
+    router, both served on the *same* stream under the same tier-economy
+    profile (``spot``), with telemetry on so the spend conservation laws
+    are audited post-run.  Records per-policy ``cost_per_1k_requests``
+    and ``joules_per_request`` next to p99/SLO, plus the paired
+    comparison the acceptance gate reads: the cost-aware router must be
+    cheaper at SLO attainment no worse than 0.02 below the baseline."""
+    profile = builtin_profile(ECONOMY_PROFILE)
+    spec = make_spec(ECONOMY_SPEC, N_MAX)
+    ecfg = ServeConfig(n_max=N_MAX, obs_spec=ECONOMY_SPEC,
+                       tick_ms=TICK_MS, telemetry=True, economy=profile)
+    pols = {
+        # the baseline sees the economy block but ignores it: pure
+        # latency-greedy routing, priced after the fact
+        "greedy": heuristic_greedy_policy(spec),
+        "cost_greedy": cost_greedy_policy(spec, profile,
+                                          tick_ms=TICK_MS),
+    }
+    rnd = lambda v, d: None if v is None else round(v, d)
+    rows = {}
+    for name, pol in pols.items():
+        rep = serve_stream(pol, pol.init(key), scenario, stream, ecfg,
+                           key=key)
+        audit = audit_serve_report(rep, n_cells=scenario.n_cells,
+                                   n_max=N_MAX,
+                                   queue_cap=ecfg.queue_cap)
+        audit.raise_on_failure()
+        eco = rep["economy"]
+        rows[name] = {
+            "cost_per_1k_requests": rnd(eco["cost_per_1k_requests"], 6),
+            "joules_per_request": rnd(eco["joules_per_request"], 4),
+            "cost_usd_total": rnd(eco["cost_usd_total"], 6),
+            "energy_j_total": rnd(eco["energy_j_total"], 1),
+            "cold_starts": eco["cold_starts"],
+            "preemptions": eco["preemptions"],
+            "served_requests": rep["served_requests"],
+            "p99_latency_ms": rnd(rep["p99_latency_ms"], 2),
+            "slo_attainment": rnd(rep["slo_attainment"], 4),
+            "violation_rate": rnd(rep["violation_rate"], 4),
+            "audit": audit.summary(),
+        }
+        print(f"— economy[{ECONOMY_PROFILE}] {name}: "
+              f"${rows[name]['cost_per_1k_requests'] or 0:.4f}/1k req, "
+              f"{rows[name]['joules_per_request'] or 0:.2f} J/req, "
+              f"{eco['cold_starts']} cold starts, "
+              f"{eco['preemptions']} preemptions, p99 "
+              f"{rows[name]['p99_latency_ms'] or 0:.0f} ms, SLO "
+              f"{rows[name]['slo_attainment'] or 0:.1%} —")
+    g, cg = rows["greedy"], rows["cost_greedy"]
+    comparison = {
+        "baseline": "greedy",
+        "candidate": "cost_greedy",
+        "cost_per_1k_delta": (None if None in (g["cost_per_1k_requests"],
+                                               cg["cost_per_1k_requests"])
+                              else round(cg["cost_per_1k_requests"]
+                                         - g["cost_per_1k_requests"], 6)),
+        "slo_delta": (None if None in (g["slo_attainment"],
+                                       cg["slo_attainment"])
+                      else round(cg["slo_attainment"]
+                                 - g["slo_attainment"], 4)),
+        "slo_tolerance": 0.02,
+    }
+    comparison["cost_lower"] = bool(
+        comparison["cost_per_1k_delta"] is not None
+        and comparison["cost_per_1k_delta"] < 0)
+    comparison["slo_within_tolerance"] = bool(
+        comparison["slo_delta"] is not None
+        and comparison["slo_delta"] >= -comparison["slo_tolerance"])
+    comparison["acceptance_met"] = (comparison["cost_lower"]
+                                    and comparison["slo_within_tolerance"])
+    if not comparison["acceptance_met"]:
+        raise RuntimeError(
+            f"economy acceptance gate: cost_greedy must beat the "
+            f"cost-oblivious greedy on $/1k requests at SLO attainment "
+            f"within {comparison['slo_tolerance']}: {comparison}")
+    return {"profile": ECONOMY_PROFILE, "obs_spec": ECONOMY_SPEC,
+            "policies": rows, "comparison": comparison}
 
 
 def main(smoke: bool = False, cells: int = 64, rounds: int = 40,
@@ -334,6 +430,11 @@ def main(smoke: bool = False, cells: int = 64, rounds: int = 40,
     print(audit.render())
     audit.raise_on_failure()
 
+    # tier-economy matrix: equal offered load, spot profile, spend
+    # conservation audited per run; the greedy (economy-on) cost figure
+    # is tier-1-gated via bench history
+    economy = run_economy_matrix(scenario, stream, k_serve)
+
     result = {
         "smoke": smoke,
         "audit": audit.summary(),
@@ -342,6 +443,11 @@ def main(smoke: bool = False, cells: int = 64, rounds: int = 40,
         "trace_stats": trace_stats,
         "stream_requests": stream.n_requests,
         "policies": policies,
+        "economy": economy,
+        "cost_per_1k_requests":
+            economy["policies"]["greedy"]["cost_per_1k_requests"],
+        "joules_per_request":
+            economy["policies"]["greedy"]["joules_per_request"],
         "decisions_per_s": max((p["decisions_per_s"]
                                 for p in policies.values()
                                 if p["decisions_per_s"] is not None),

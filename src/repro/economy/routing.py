@@ -1,0 +1,194 @@
+"""Cost-aware routing: the cold-start-aware greedy policy and the exact
+multi-objective solver.
+
+``cost_greedy_policy`` extends the latency-greedy serving baseline with
+the economy observation block: among accuracy-feasible actions it
+minimizes the scalarized objective
+
+    effective_latency · (1 + λ_c · route_price[tier]) + λ_e · energy[tier]
+
+where *effective* latency adds the chosen tier's remaining warmup wait
+(cold tiers charge their full cold start).  Tier selection follows the
+SNIPPETS hybrid-orchestrator meta-LB pattern:
+
+  * short deadline slack → non-warm tiers whose effective latency would
+    bust the cell's latency target are excluded, so traffic routes
+    around cold tiers and spills to the (expensive) always-warm tier;
+  * enough slack → a cold cheap tier may win the argmin, which *is* the
+    warm-up trigger: sustained backlog keeps re-selecting it until the
+    warmup amortizes to zero and the cheap tier takes the load.
+
+``solve_optimal_economy`` maps the same scalarization onto the exact
+occupancy-count solver's tier weights (usage cost is proportional to
+billed compute time, energy is a per-request constant), so the oracle
+and any reward shaped from it stay aligned with what serving bills.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.env import latency_model as lm
+from repro.economy.tiers import EconomyProfile
+from repro.policy.adapters import (ACC_TOL, _ACC_MENU, _require_base_first,
+                                   _round_progress)
+from repro.policy.api import Policy
+from repro.specs.observation import (ACC_NORM, ECON_PRICE_NORM, OCC_LEVELS,
+                                     WARMUP_NORM, ObservationSpec)
+
+# Default scalarization weights.  λ_c is in seconds-of-latency per dollar
+# (1000 ⇒ $1 ≈ 1000 s): a spot-cloud request at 2.4e-3 $/req-s weighs
+# ~3.4× its latency, a cheap spot-edge one ~1.4× — enough to prefer warm
+# cheap tiers and spill to the expensive tier only under contention or
+# cold starts.  λ_e is ms per joule (5 ⇒ a 10 J cloud request adds 50 ms
+# equivalent).
+LAM_COST = 1000.0
+LAM_ENERGY = 5.0
+
+
+def cost_greedy_policy(spec: ObservationSpec, profile: EconomyProfile, *,
+                       lam_cost: float = LAM_COST,
+                       lam_energy: float = LAM_ENERGY,
+                       tick_ms: float = 50.0) -> Policy:
+    """Cold-start- and cost-aware greedy router over the economy spec.
+
+    Decodes per-action latency estimates exactly like
+    ``heuristic_greedy_policy`` (same base-block features), then weighs
+    them with the profile's routing prices and energy costs and the
+    live per-tier startup state from the ``economy`` block.  Params
+    carry the scenario constants (``constraint``, ``n_users``,
+    ``latency_target``) and are re-derived by ``refresh``."""
+    n_max = _require_base_first(spec)
+    if not (isinstance(spec, ObservationSpec) and "economy" in spec.blocks):
+        raise ValueError(
+            "cost_greedy_policy needs a spec with the 'economy' block "
+            "(variants 'economy' or 'full_economy'); got "
+            f"{getattr(spec, 'name', spec)!r}")
+    e0 = spec.block_slices()["economy"].start
+    acc_menu = _ACC_MENU
+    t_local = jnp.asarray(lm.T_LOCAL, jnp.float32)
+    base = 4 * n_max
+    # action → tier, and the per-action economic weights
+    tier_of = jnp.asarray([0] * lm.N_MODELS + [1, 2], jnp.int32)
+    scale3 = 1.0 + lam_cost * jnp.asarray(profile.route_price(),
+                                          jnp.float32)
+    energy3 = lam_energy * jnp.asarray(profile.energy_j_per_req,
+                                       jnp.float32)
+
+    @jax.jit
+    def act(params, obs, key):
+        n = params["n_users"].astype(jnp.float32)
+        constraint = params["constraint"].astype(jnp.float32)
+        target = params["latency_target"].astype(jnp.float32)
+        cell = jnp.arange(obs.shape[0])
+        u, committed, remaining = _round_progress(obs, n_max, n)
+        busy_p = obs[cell, n_max + u] > 0.5
+        busy_m = obs[cell, 2 * n_max + u] > 0.5
+        k_edge = obs[:, base] * OCC_LEVELS
+        busy_m_e = obs[:, base + 1] > 0.5
+        weak_e = obs[:, base + 2] > 0.5
+        k_cloud = obs[:, base + 3] * OCC_LEVELS
+        busy_m_c = obs[:, base + 4] > 0.5
+        need = (constraint * n - committed) / remaining
+
+        tl = (t_local[None, :]
+              * jnp.where(busy_p, lm.BUSY_CPU_LOCAL, 1.0)[:, None]
+              * jnp.where(busy_m, lm.BUSY_MEM, 1.0)[:, None])
+        te = (lm.T_EDGE_D0 * jnp.maximum(1.0, k_edge + 1.0)
+              * jnp.where(busy_m_e, lm.BUSY_MEM, 1.0)
+              + jnp.where(weak_e, lm.WEAK_E_EDGE, 0.0))
+        tc = (lm.T_CLOUD_D0 * jnp.maximum(1.0, k_cloud + 1.0)
+              * jnp.where(busy_m_c, lm.BUSY_MEM, 1.0)
+              + jnp.where(weak_e, lm.WEAK_E_CLOUD, 0.0))
+        lat = jnp.concatenate([tl, te[:, None], tc[:, None]], -1)
+
+        # economy block: per tier [state/2, ticks-to-warm/norm, price/norm]
+        eco = obs[:, e0:e0 + 9].reshape(-1, 3, 3)
+        warm = eco[:, :, 0] > 0.75            # state feature 1.0 ⇔ WARM
+        boot_ms = eco[:, :, 1] * WARMUP_NORM * tick_ms
+        pen = jnp.where(warm, 0.0, boot_ms)   # cold encodes its full start
+        lat_eff = lat + pen[:, tier_of]
+
+        feasible = (acc_menu[None, :] + ACC_TOL / remaining[:, None]
+                    >= need[:, None])
+        # deadline gating: a non-warm tier is only eligible while its
+        # warmup still fits the cell's latency target — short slack
+        # routes around cold tiers, long slack lets backlog warm them
+        allowed = warm[:, tier_of] | (lat_eff <= target[:, None])
+        w = lat_eff * scale3[tier_of][None, :] + energy3[tier_of][None, :]
+        cost = jnp.where(feasible & allowed, w, jnp.inf)
+        # the fastest feasible action regardless of price (the always-
+        # warm expensive tier, when the cheap ones are cold or slow)
+        spill = jnp.where(feasible, lat_eff, jnp.inf)
+        # unsatisfiable remainder: damage control, most accurate cheapest
+        fallback = jnp.where(acc_menu[None, :] >= acc_menu.max() - 1e-6,
+                             lat, jnp.inf)
+        a_cost = jnp.argmin(cost, -1)
+        a_fast = jnp.argmin(spill, -1)
+        # meta-LB spillover: take the cheap pick only while it is
+        # predicted to hold the cell's latency target — under deadline
+        # pressure spill to the fastest feasible action, price be damned
+        cheap_ok = ((feasible & allowed).any(-1)
+                    & (lat_eff[cell, a_cost] <= target))
+        a = jnp.where(
+            cheap_ok, a_cost,
+            jnp.where(feasible.any(-1), a_fast,
+                      jnp.argmin(fallback, -1)))
+        return a.astype(jnp.int32)
+
+    def init(key):
+        return {"constraint": jnp.zeros((0,), jnp.float32),
+                "n_users": jnp.zeros((0,), jnp.float32),
+                "latency_target": jnp.zeros((0,), jnp.float32)}
+
+    def refresh(params, scenario):
+        return {"constraint": jnp.asarray(scenario.constraint,
+                                          jnp.float32),
+                "n_users": jnp.asarray(scenario.n_users)
+                .astype(jnp.float32),
+                "latency_target": jnp.asarray(scenario.latency_targets(),
+                                              jnp.float32)}
+
+    def with_users(params, n_users):
+        return dict(params, n_users=jnp.asarray(n_users)
+                    .astype(jnp.float32))
+
+    return Policy("cost_greedy", init, act, refresh,
+                  with_users=with_users)
+
+
+def economy_tier_weights(profile: EconomyProfile,
+                         lam_cost: float = LAM_COST,
+                         lam_energy: float = LAM_ENERGY):
+    """(tier_scale, tier_offset) for ``fleet.solver.solve_optimal``:
+    per request on tier t the scalarized objective adds
+    ``compute_ms·(1 + λ_c·price_t) + λ_e·energy_t``."""
+    scale = tuple(1.0 + lam_cost * p for p in profile.route_price())
+    offset = tuple(lam_energy * e for e in profile.energy_j_per_req)
+    return scale, offset
+
+
+def solve_optimal_economy(scenario, constraint: float, n_users: int,
+                          profile: EconomyProfile, *,
+                          lam_cost: float = LAM_COST,
+                          lam_energy: float = LAM_ENERGY) -> dict:
+    """Exact optimum of the scalarized ``latency + λ_c·cost + λ_e·energy``
+    round objective (quiet background).  With ``λ_c = λ_e = 0`` this is
+    ``solve_optimal`` bit-for-bit.  Returns the solver dict plus the
+    dollar cost and energy of the chosen assignment."""
+    from repro.fleet.solver import solve_optimal
+    scale, offset = economy_tier_weights(profile, lam_cost, lam_energy)
+    r = solve_optimal(scenario, constraint, n_users,
+                      tier_scale=scale, tier_offset=offset)
+    import numpy as np
+    sc = scenario.for_users(n_users)
+    t = lm.response_times(np.asarray(r["actions"]), sc.weak_s_arr(),
+                          sc.weak_e)
+    tiers = np.where(np.asarray(r["actions"]) == lm.A_EDGE, 1,
+                     np.where(np.asarray(r["actions"]) == lm.A_CLOUD,
+                              2, 0))
+    price = np.asarray(profile.route_price())
+    energy = np.asarray(profile.energy_j_per_req)
+    r["cost_usd"] = float((t / 1e3 * price[tiers]).sum())
+    r["energy_j"] = float(energy[tiers].sum())
+    return r

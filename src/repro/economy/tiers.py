@@ -1,0 +1,274 @@
+"""Tier economics — price, energy, and a startup state machine per tier.
+
+Every device tier (local, edge, cloud) gets an *economic identity*: a
+usage price ($ per request-second of service), an uptime holding price
+($ per second a tier instance is kept warm), an energy cost (J per
+request), and a startup state machine
+
+    COLD --route--> WARMING --cold_start_ticks--> WARM
+    WARM --idle_timeout_ticks idle--> COLD          (scale-to-zero)
+    WARM/WARMING --preempt_prob per tick--> WARMING (spot preemption,
+                                                     recovery_ticks)
+
+The machine lives in :class:`TierEconomyState`, a jit-friendly pytree of
+per-(cell, tier) arrays carried inside ``FleetState`` and advanced once
+per serve tick by :func:`advance_economy` — cold starts and preemptions
+therefore interact with the queues and deadlines of the request-level
+engine, not with a side simulation.  A request routed to a non-warm tier
+waits out the remaining warmup: the wait is charged to its record's
+service latency (and its round's ART), exactly as if the tier booted
+while the request held its slot.
+
+Accounting is **integer**: spend in micro-dollars (µ$), energy in
+millijoules (mJ).  Each tick's billing is rounded once and added
+identically to the per-cell lifetime totals and (by the engine) to the
+per-window telemetry counters, so the audit law
+``Σ per-window spend == run spend`` holds exactly, sharded or not.
+
+Builtin profiles (:func:`builtin_profile`) follow the SNIPPETS hybrid
+GPU-orchestrator taxonomy:
+
+    ``local``       accounting only: every tier always-warm and free,
+                    energy still metered — byte-identical scheduling to
+                    ``economy=None`` (test-enforced)
+    ``serverless``  edge/cloud usage-priced with second-scale cold
+                    starts and scale-to-zero; no preemption
+    ``spot``        cheap uptime-priced edge with a slow cold start,
+                    preemption + recovery, scale-to-zero; the cloud is
+                    the expensive always-available serverless spill
+                    target; local stays free and always-on
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.env import latency_model as lm
+
+# startup states (per cell, per tier)
+COLD, WARMING, WARM = 0, 1, 2
+N_TIERS = 3
+TIER_NAMES = ("local", "edge", "cloud")
+
+SPEND_SCALE = 1e6   # µ$ per $
+ENERGY_SCALE = 1e3  # mJ per J
+
+
+@dataclasses.dataclass(frozen=True)
+class EconomyProfile:
+    """Static per-tier economics, tuple-valued (hashable, so a profile is
+    a valid jit-static config field).  Tuples are ordered (local, edge,
+    cloud).  ``idle_timeout_ticks == 0`` disables scale-to-zero;
+    ``preempt_prob`` is per tick and requires ``recovery_ticks > 0`` to
+    have any effect."""
+    name: str
+    price_per_req_s: tuple    # $ per request-second of service
+    uptime_price_per_s: tuple  # $ per second a tier is warm/warming
+    energy_j_per_req: tuple   # J per served request
+    cold_start_ticks: tuple   # ticks from COLD to WARM (0 = instant)
+    preempt_prob: tuple       # per-tick P(preempt) while not cold
+    recovery_ticks: tuple     # warmup after a preemption
+    idle_timeout_ticks: tuple  # warm ticks with no traffic → COLD (0 = never)
+    start_cold: tuple = (False, False, False)
+
+    def route_price(self) -> tuple:
+        """Effective $/request-second a router should weigh: usage price
+        plus the uptime price the busy instance burns meanwhile."""
+        return tuple(p + u for p, u in zip(self.price_per_req_s,
+                                           self.uptime_price_per_s))
+
+
+_BUILTIN = {
+    "local": EconomyProfile(
+        name="local",
+        price_per_req_s=(0.0, 0.0, 0.0),
+        uptime_price_per_s=(0.0, 0.0, 0.0),
+        energy_j_per_req=(1.0, 4.0, 10.0),
+        cold_start_ticks=(0, 0, 0),
+        preempt_prob=(0.0, 0.0, 0.0),
+        recovery_ticks=(0, 0, 0),
+        idle_timeout_ticks=(0, 0, 0),
+    ),
+    "serverless": EconomyProfile(
+        name="serverless",
+        price_per_req_s=(0.0, 1.2e-3, 2.4e-3),
+        uptime_price_per_s=(0.0, 0.0, 0.0),
+        energy_j_per_req=(1.0, 4.0, 10.0),
+        cold_start_ticks=(0, 2, 2),
+        preempt_prob=(0.0, 0.0, 0.0),
+        recovery_ticks=(0, 0, 0),
+        idle_timeout_ticks=(0, 40, 40),
+    ),
+    "spot": EconomyProfile(
+        name="spot",
+        price_per_req_s=(0.0, 2.0e-4, 2.4e-3),
+        uptime_price_per_s=(0.0, 2.0e-4, 0.0),
+        energy_j_per_req=(1.0, 4.0, 10.0),
+        cold_start_ticks=(0, 20, 0),
+        preempt_prob=(0.0, 2.0e-3, 0.0),
+        recovery_ticks=(0, 10, 0),
+        idle_timeout_ticks=(0, 60, 20),
+    ),
+}
+PROFILE_NAMES = tuple(_BUILTIN)
+
+
+def builtin_profile(name: str) -> EconomyProfile:
+    if name not in _BUILTIN:
+        raise ValueError(f"unknown economy profile {name!r}; "
+                         f"choose from {PROFILE_NAMES}")
+    return _BUILTIN[name]
+
+
+class TierEconomyState(NamedTuple):
+    """Per-cell tier-economy state, all shapes leading (C, ...) so the
+    pytree shards over the cells mesh axis like the rest of the fleet."""
+    tier_state: jnp.ndarray       # (C, 3) int32 — COLD/WARMING/WARM
+    warmup_left: jnp.ndarray      # (C, 3) int32 — ticks until WARM
+    idle_ticks: jnp.ndarray       # (C, 3) int32 — consecutive idle ticks
+    slot_penalty_ms: jnp.ndarray  # (C, n_max) float32 — warmup wait per slot
+    spend_uusd: jnp.ndarray       # (C,) int32 — lifetime spend, µ$
+    energy_mj: jnp.ndarray        # (C,) int32 — lifetime energy, mJ
+    cold_starts: jnp.ndarray      # (C,) int32
+    preemptions: jnp.ndarray      # (C,) int32
+
+
+def tier_of_action(a: jnp.ndarray) -> jnp.ndarray:
+    """Action id → tier id (0 local, 1 edge, 2 cloud); the d7 placeholder
+    (-1 → local) matches the env's undecided-slot semantics."""
+    a = jnp.asarray(a)
+    return jnp.where(a == lm.A_EDGE, 1,
+                     jnp.where(a == lm.A_CLOUD, 2, 0)).astype(jnp.int32)
+
+
+def init_economy(profile: EconomyProfile, n_cells: int,
+                 n_max: int) -> TierEconomyState:
+    start = jnp.where(jnp.asarray(profile.start_cold, bool), COLD, WARM)
+    zi3 = jnp.zeros((n_cells, N_TIERS), jnp.int32)
+    zc = jnp.zeros((n_cells,), jnp.int32)
+    return TierEconomyState(
+        tier_state=jnp.broadcast_to(start.astype(jnp.int32)[None, :],
+                                    (n_cells, N_TIERS)),
+        warmup_left=zi3,
+        idle_ticks=zi3,
+        slot_penalty_ms=jnp.zeros((n_cells, n_max), jnp.float32),
+        spend_uusd=zc, energy_mj=zc, cold_starts=zc, preemptions=zc)
+
+
+def ticks_to_warm(profile: EconomyProfile,
+                  econ: TierEconomyState) -> jnp.ndarray:
+    """(C, 3) ticks until each tier could serve a request routed *now*:
+    0 when warm, the remaining warmup when warming, the full cold start
+    when cold — the number the observation block and the cost-aware
+    router reason about."""
+    cs = jnp.asarray(profile.cold_start_ticks, jnp.int32)
+    return jnp.where(econ.tier_state == COLD,
+                     jnp.broadcast_to(cs[None, :], econ.tier_state.shape),
+                     econ.warmup_left)
+
+
+def advance_economy(profile: EconomyProfile, econ: TierEconomyState, *,
+                    tick_ms: float, action, cursor, active, now,
+                    round_start, round_actions, in_round, rec_mask,
+                    times, fin, key, cell_ids):
+    """One serve-tick transition of the tier state machine + billing.
+
+    ``action``/``cursor``/``active`` describe this tick's decisions
+    (one per active cell); ``round_actions``/``in_round`` the committed
+    slots of in-flight rounds; ``rec_mask``/``times``/``fin`` the rounds
+    completing this tick.  ``cell_ids`` are *global* cell ids — the
+    preemption draws are keyed by them (``fold_in``), so a sharded fleet
+    reproduces the single-device draws exactly.
+
+    Returns ``(econ', slot_penalty_ms, events)``: the advanced state
+    (slot penalties of finished rounds cleared), the *pre-clear* penalty
+    matrix (what the engine adds to this tick's completed-request service
+    times), and scalar event sums for the telemetry counters/gauges.
+    """
+    cs_ticks = jnp.asarray(profile.cold_start_ticks, jnp.int32)
+    rcv_ticks = jnp.asarray(profile.recovery_ticks, jnp.int32)
+    idle_to = jnp.asarray(profile.idle_timeout_ticks, jnp.int32)
+    pre_p = jnp.asarray(profile.preempt_prob, jnp.float32)
+    price = jnp.asarray(profile.price_per_req_s, jnp.float32)
+    up_price = jnp.asarray(profile.uptime_price_per_s, jnp.float32)
+    energy = jnp.asarray(profile.energy_j_per_req, jnp.float32)
+
+    cell = jnp.arange(econ.tier_state.shape[0])
+    st, wl = econ.tier_state, econ.warmup_left
+    tier = tier_of_action(action)
+    sel = st[cell, tier]
+
+    # -- decision: charge the chosen tier's remaining warmup to the slot.
+    # The request serves only once the tier is warm; measured from its
+    # round start that wait is (now - round_start) + remaining·tick.
+    left_sel = jnp.where(sel == COLD, cs_ticks[tier], wl[cell, tier])
+    pen_now = jnp.where(active & (left_sel > 0),
+                        (now - round_start)
+                        + left_sel.astype(jnp.float32) * tick_ms, 0.0)
+    slot_pen = econ.slot_penalty_ms.at[cell, cursor].set(
+        jnp.where(active, pen_now, econ.slot_penalty_ms[cell, cursor]))
+    # routing to a cold tier triggers its (single) cold start
+    cold_hit = active & (sel == COLD)
+    st = st.at[cell, tier].set(jnp.where(
+        cold_hit, jnp.where(cs_ticks[tier] > 0, WARMING, WARM), sel))
+    wl = wl.at[cell, tier].set(
+        jnp.where(cold_hit, cs_ticks[tier], wl[cell, tier]))
+    cold_starts = cold_hit.astype(jnp.int32)
+
+    # -- warmup countdown: a warming tier reaching zero turns warm
+    warming = st == WARMING
+    wl = jnp.where(warming, jnp.maximum(wl - 1, 0), wl)
+    st = jnp.where(warming & (wl == 0), WARM, st)
+
+    # -- scale-to-zero: a tier is busy iff any committed in-round slot
+    # runs on it; enough consecutive idle ticks turn a warm tier cold
+    slot_tier = tier_of_action(round_actions)
+    decided = in_round & (round_actions >= 0)
+    busy = jnp.stack([(decided & (slot_tier == t)).any(-1)
+                      for t in range(N_TIERS)], axis=-1)
+    idle = jnp.where(busy, 0, econ.idle_ticks + 1)
+    timeout = ((st == WARM) & (idle_to[None, :] > 0)
+               & (idle >= idle_to[None, :]))
+    st = jnp.where(timeout, COLD, st)
+    idle = jnp.where(timeout, 0, idle)
+
+    # -- spot preemption: iid per (cell, tier), keyed by global cell id
+    draw = jax.vmap(lambda cid: jax.random.uniform(
+        jax.random.fold_in(key, cid), (N_TIERS,)))(cell_ids)
+    pre = ((draw < pre_p[None, :]) & (st != COLD)
+           & (rcv_ticks[None, :] > 0))
+    wl = jnp.where(pre, jnp.maximum(wl, rcv_ticks[None, :]), wl)
+    st = jnp.where(pre, WARMING, st)
+    preemptions = pre.sum(-1).astype(jnp.int32)
+
+    # -- billing (integer µ$ / mJ, rounded once per cell per tick):
+    # holding cost for every non-cold tier instance, usage + energy for
+    # the requests completing this tick (their billed duration includes
+    # the warmup wait they sat through — you pay while you boot)
+    hold_usd = (((st != COLD).astype(jnp.float32)
+                 * up_price[None, :]).sum(-1) * (tick_ms / 1e3))
+    billed_ms = jnp.where(rec_mask, times + slot_pen, 0.0)
+    use_usd = (billed_ms * price[slot_tier] / 1e3).sum(-1)
+    use_j = jnp.where(rec_mask, energy[slot_tier], 0.0).sum(-1)
+    spend = jnp.round((hold_usd + use_usd) * SPEND_SCALE).astype(jnp.int32)
+    joule = jnp.round(use_j * ENERGY_SCALE).astype(jnp.int32)
+
+    econ2 = TierEconomyState(
+        tier_state=st, warmup_left=wl, idle_ticks=idle,
+        slot_penalty_ms=jnp.where(fin[:, None], 0.0, slot_pen),
+        spend_uusd=econ.spend_uusd + spend,
+        energy_mj=econ.energy_mj + joule,
+        cold_starts=econ.cold_starts + cold_starts,
+        preemptions=econ.preemptions + preemptions)
+    events = {
+        "cold_starts": cold_starts.sum(),
+        "preemptions": preemptions.sum(),
+        "spend_uusd": spend.sum(),
+        "energy_mj": joule.sum(),
+        "warm_tiers": (st == WARM).sum(),
+        "warming_tiers": (st == WARMING).sum(),
+    }
+    return econ2, slot_pen, events

@@ -37,6 +37,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.economy.tiers import (EconomyProfile, TierEconomyState,
+                                 init_economy, ticks_to_warm)
 from repro.env.edge_cloud import (PENALTY_BASE, PENALTY_PER_PCT,
                                   REWARD_SCALE)
 from repro.fleet import latency
@@ -72,6 +74,12 @@ class FleetConfig:
     # device (background draws are keyed per *global* cell id).
     cell_axis: str | None = None
     cell_axis_size: int = 1
+    # Optional tier economics (repro.economy): when set, ``init`` seeds a
+    # per-cell ``TierEconomyState`` on ``FleetState.econ`` and ``observe``
+    # feeds the spec's ``economy`` block from it.  The env itself never
+    # advances the state machine — the serve engine does, per tick —
+    # and ``economy=None`` leaves every compiled program unchanged.
+    economy: EconomyProfile | None = None
 
     def spec(self) -> ObservationSpec:
         return make_spec(self.obs_spec, self.n_max)
@@ -96,6 +104,9 @@ class FleetState(NamedTuple):
     user: jnp.ndarray      # (C,) int32 — requesting-user cursor
     charged: jnp.ndarray   # (C,) float32 — dense reward charged so far
     bg: FleetBackground
+    # tier-economy state (None unless FleetConfig.economy is set — the
+    # trailing default keeps every existing constructor/pytree unchanged)
+    econ: TierEconomyState | None = None
 
 
 class FleetEnvFns(NamedTuple):
@@ -151,6 +162,8 @@ def make_fleet_env(cfg: FleetConfig) -> FleetEnvFns:
             user=jnp.zeros((n_cells,), jnp.int32),
             charged=jnp.zeros((n_cells,), jnp.float32),
             bg=sample_background(sub, n_cells),
+            econ=(init_economy(cfg.economy, n_cells, n_max)
+                  if cfg.economy is not None else None),
         )
 
     def reset_rounds(state: FleetState) -> FleetState:
@@ -235,6 +248,14 @@ def make_fleet_env(cfg: FleetConfig) -> FleetEnvFns:
             num_segments=_n_cells_global(n_cells))
         group_sz = go(jnp.ones_like(groups))
         edge_group = go(edge_occ) / jnp.maximum(1, group_sz)
+        eco = {}
+        if cfg.economy is not None and state.econ is not None:
+            price = jnp.asarray(cfg.economy.route_price(), jnp.float32)
+            eco = dict(
+                econ_state=state.econ.tier_state,
+                econ_warm_ticks=ticks_to_warm(cfg.economy, state.econ),
+                econ_price=jnp.broadcast_to(price[None, :],
+                                            (n_cells, price.shape[0])))
         return spec.encode_jnp(ObsInputs(
             user=state.user, n_users=scenario.n_users,
             busy_p_s=state.bg.busy_p_s, busy_m_s=state.bg.busy_m_s,
@@ -243,7 +264,7 @@ def make_fleet_env(cfg: FleetConfig) -> FleetEnvFns:
             k_edge=k_edge, k_cloud=k_cloud, acc_sum=acc_sum,
             cloud_fleet=cloud_fleet, edge_group=edge_group,
             constraint=scenario.constraint,
-            latency_target=scenario.latency_targets()))
+            latency_target=scenario.latency_targets(), **eco))
 
     def step(scenario: FleetScenario, state: FleetState, actions_in):
         """One orchestration decision per cell. Returns
@@ -288,6 +309,7 @@ def make_fleet_env(cfg: FleetConfig) -> FleetEnvFns:
             user=jnp.where(done, 0, user2),
             charged=jnp.where(done, 0.0, charged).astype(jnp.float32),
             bg=jax.tree.map(pick, bg_new, state.bg),
+            econ=state.econ,  # advanced by the serve engine, not here
         )
         info = {"art": art, "acc": acc, "violated": violated,
                 "t_ms": jnp.where(done, t_i + jnp.maximum(0.0, settle), t_i),

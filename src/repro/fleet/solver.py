@@ -36,13 +36,15 @@ _ACC_TENTHS = np.round(np.asarray(lm.ACCURACY) * 10).astype(np.int64)
 _ACC_D0 = int(_ACC_TENTHS[0])  # edge/cloud both run d0
 
 
-def _local_dp(n: int):
+def _local_dp(n: int, t_menu=lm.T_LOCAL):
     """Exact DP over local-model multisets.
 
-    Returns (f, choice) where f[u, a] is the minimal total local time of u
+    Returns (f, choice) where f[u, a] is the minimal total local cost of u
     users whose accuracies sum to exactly a tenths, and choice[u, a] is the
     model index achieving it (for backtracking).  f has shape
-    (n+1, n·max_acc + 1) with +inf at unreachable sums.
+    (n+1, n·max_acc + 1) with +inf at unreachable sums.  ``t_menu`` is the
+    per-model cost menu — the plain Table-III times by default, or a
+    tier-weighted menu for the multi-objective solver.
     """
     a_max = n * _ACC_TENTHS.max()
     f = np.full((n + 1, a_max + 1), np.inf)
@@ -54,7 +56,7 @@ def _local_dp(n: int):
         for m in range(lm.N_MODELS):
             da = int(_ACC_TENTHS[m])
             cand = np.full(a_max + 1, np.inf)
-            cand[da:] = f[u - 1, :a_max + 1 - da] + lm.T_LOCAL[m]
+            cand[da:] = f[u - 1, :a_max + 1 - da] + t_menu[m]
             better = cand < best
             best[better] = cand[better]
             pick[better] = m
@@ -73,16 +75,35 @@ def _backtrack(choice, n_local: int, a: int) -> list[int]:
 
 
 def solve_optimal(scenario: Scenario, constraint: float,
-                  n_users: int) -> dict:
+                  n_users: int, *,
+                  tier_scale=(1.0, 1.0, 1.0),
+                  tier_offset=(0.0, 0.0, 0.0)) -> dict:
     """Drop-in replacement for ``brute_force_optimal`` (same contract):
-    quiet background, returns {"art", "acc", "actions"} with the action
-    vector in the same (ascending) order brute force reports."""
+    quiet background, returns {"art", "acc", "actions", "objective"} with
+    the action vector in the same (ascending) order brute force reports.
+
+    ``tier_scale``/``tier_offset`` generalize the objective per (local,
+    edge, cloud) tier: each request on tier t contributes
+    ``compute_ms·scale[t] + offset[t]`` — the scalarized multi-objective
+    ``latency + λ_c·cost + λ_e·energy`` of ``repro.economy.routing`` maps
+    onto exactly this form (usage cost is proportional to compute time,
+    energy is a per-request constant).  Weak-*network* penalties (80 ms
+    weak node, weak-edge surcharges) stay unscaled: they are transmission
+    time, not billed compute.  The DP structure is unchanged — the weak-
+    node penalty remains placement-independent, and the tier weights
+    preserve occupancy-count symmetry — so the solver stays exact.  The
+    defaults (1, 0) reproduce the unweighted solver bit-for-bit; the
+    returned ``art``/``acc`` always evaluate the chosen actions through
+    the unweighted reference model."""
     sc = scenario.for_users(n_users)
     n = n_users
     weak_e_edge = lm.WEAK_E_EDGE if sc.weak_e else 0.0
     weak_e_cloud = lm.WEAK_E_CLOUD if sc.weak_e else 0.0
+    a0, a1, a2 = tier_scale
+    b0, b1, b2 = tier_offset
 
-    f, choice = _local_dp(n)
+    t_menu = [lm.T_LOCAL[m] * a0 + b0 for m in range(lm.N_MODELS)]
+    f, choice = _local_dp(n, t_menu)
     # suffix minimum over the accuracy axis: g[u, a] = min_{a'>=a} f[u, a'],
     # arg[u, a] = smallest such a' attaining it (matches brute force's
     # first-found/lexicographic preference).
@@ -100,14 +121,16 @@ def solve_optimal(scenario: Scenario, constraint: float,
             continue
         for k_e in range(k_off + 1):
             k_c = k_off - k_e
-            t_off = (k_e * (lm.T_EDGE_D0 * max(1, k_e) + weak_e_edge)
-                     + k_c * (lm.T_CLOUD_D0 * max(1, k_c) + weak_e_cloud))
+            t_off = (k_e * ((lm.T_EDGE_D0 * max(1, k_e)) * a1
+                            + weak_e_edge + b1)
+                     + k_c * ((lm.T_CLOUD_D0 * max(1, k_c)) * a2
+                              + weak_e_cloud + b2))
             total = t_local + t_off
             if best is None or total < best[0] - 1e-12:
                 best = (total, k_off, k_e, k_c, a_req)
     assert best is not None, "constraint unsatisfiable"
 
-    _, k_off, k_e, k_c, a_req = best
+    objective, k_off, k_e, k_c, a_req = best
     n_local = n - k_off
     if n_local:
         row = f[n_local, a_req:]
@@ -123,7 +146,7 @@ def solve_optimal(scenario: Scenario, constraint: float,
     t = lm.response_times(actions, sc.weak_s_arr(), sc.weak_e)
     acc = lm.action_accuracy(actions)
     return {"art": float(t.mean()), "acc": float(acc.mean()),
-            "actions": actions}
+            "actions": actions, "objective": float(objective)}
 
 
 def solve_fleet(scenario) -> dict:

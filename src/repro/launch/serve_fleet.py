@@ -8,6 +8,7 @@
         [--trace-out trace.jsonl] [--trace-sample 1.0] \
         [--live] [--live-out live.ndjson] [--slo-target 0.9] \
         [--canary other.bundle.msgpack] [--mesh-cells N] \
+        [--economy local|serverless|spot] \
         [--round-replay] [--out serve.json]
 
 This module is a thin shell over ``repro.serve``: it loads a
@@ -47,6 +48,18 @@ arrival stream (same fleet, same stream, same serving key) and attaches
 a paired per-window diff — Δp99 / Δattainment / Δdrops plus sign-flip
 windows — under ``"canary"`` in the report.
 
+Economy: ``--economy <profile>`` (``local`` / ``serverless`` / ``spot``,
+see ``repro.economy``) gives every tier a price, an energy cost, and a
+warm/cold/warming startup state machine advanced inside the tick scan —
+cold starts and spot preemptions delay recorded service, and the report
+gains ``"economy"`` ($-spend, joules, ``cost_per_1k_requests``,
+``joules_per_request``, cold-start / preemption counts).  With
+``--telemetry`` the per-window spend/energy/cold-start counters ride in
+the same metric buffer (and NDJSON stream), and
+``repro.telemetry.audit`` checks the spend conservation law
+Σ per-window spend == run spend.  Request-level only: the compat round
+gateway has no tick clock, so ``--economy`` rejects ``--round-replay``.
+
 Every run echoes its resolved seed and config in the output header (and
 records them under ``"config"`` in the report), so any served run can be
 reproduced bit-exactly from its printout alone.
@@ -63,6 +76,7 @@ import os
 
 import jax
 
+from repro.economy import PROFILE_NAMES, builtin_profile
 from repro.fleet.env import FleetConfig
 from repro.fleet.workload import poisson_round_trace, random_fleet
 from repro.policy.adapters import (heuristic_greedy_policy, slo_guarded,
@@ -70,7 +84,8 @@ from repro.policy.adapters import (heuristic_greedy_policy, slo_guarded,
 from repro.policy.api import Policy
 from repro.policy.bundle import load_bundle, policy_from_bundle
 from repro.serve import (ServeConfig, poisson_request_stream, serve_stream)
-from repro.serve.engine import TEL_COUNTERS, TEL_GAUGES
+from repro.serve.engine import (ECON_COUNTERS, ECON_GAUGES, TEL_COUNTERS,
+                                TEL_GAUGES)
 from repro.sharding.runtime import cells_mesh, set_mesh_info
 from repro.telemetry import (BurnRateAlerter, BurnRateConfig, LiveEmitter,
                              build_trace, canary_diff, open_sink,
@@ -114,7 +129,7 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
                  live: bool = False, live_out: str = None,
                  slo_target: float = 0.9, canary: str = None,
                  round_replay: bool = False, mesh_cells: int = 0,
-                 verbose: bool = True) -> dict:
+                 economy: str = None, verbose: bool = True) -> dict:
     """Load a PolicyBundle, build a held-out random fleet at the bundle's
     (spec, n_max), and serve ``rounds`` round-durations' worth of Poisson
     traffic through it — request-level by default, round replay with
@@ -135,6 +150,17 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
     if round_replay and canary:
         raise SystemExit("--canary is a request-level feature; drop "
                          "--round-replay to use it")
+    profile = None
+    if economy:
+        if round_replay:
+            raise SystemExit("--economy prices the request-level tick "
+                             "clock (cold starts, preemptions, per-tick "
+                             "billing); the compat round gateway has "
+                             "none — drop --round-replay to use it")
+        try:
+            profile = builtin_profile(economy)
+        except ValueError as e:
+            raise SystemExit(str(e))
     mesh = None
     if mesh_cells:
         if round_replay:
@@ -175,6 +201,7 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
                   trace_sample=trace_sample, round_replay=round_replay,
                   live=live, live_out=live_out, slo_target=slo_target,
                   canary=canary, mesh_cells=mesh_cells,
+                  economy=economy,
                   obs_spec=bundle.obs_spec, n_max=bundle.n_max,
                   **couplings)
     if verbose:
@@ -220,7 +247,8 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
         cfg = ServeConfig(n_max=bundle.n_max, obs_spec=bundle.obs_spec,
                           quiet=quiet, tick_ms=tick_ms,
                           queue_cap=queue_cap, telemetry=telemetry,
-                          window_ms=window_ms, **couplings)
+                          window_ms=window_ms, economy=profile,
+                          **couplings)
         horizon_ms = rounds * cfg.round_ms
         stream = poisson_request_stream(
             k_trace, scenario, horizon_ms, rate=rate,
@@ -228,8 +256,12 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
             epoch_ms=horizon_ms / max(1, epochs))
         emitter = None
         if live:
+            # metric names must match the engine's buffer layout: the
+            # economy counters/gauges ride in the same windows
+            counters = TEL_COUNTERS + (ECON_COUNTERS if profile else ())
+            gauges = TEL_GAUGES + (ECON_GAUGES if profile else ())
             emitter = LiveEmitter(
-                open_sink(live_out), TEL_COUNTERS, TEL_GAUGES,
+                open_sink(live_out), counters, gauges,
                 window_ms=window_ms,
                 alerter=BurnRateAlerter(BurnRateConfig(target=slo_target)))
         report = serve_stream(policy, params, scenario, stream, cfg,
@@ -275,6 +307,19 @@ def serve_bundle(bundle_path: str, *, rounds: int = 50, cells: int = 64,
                   f"accuracy violations {report['violation_rate']:.1%}"
                   + (f", {dps:,.0f} decisions/s steady-state" if dps
                      else " (no steady-state window)"))
+            if profile is not None:
+                eco = report["economy"]
+                c1k = eco["cost_per_1k_requests"]
+                jpr = eco["joules_per_request"]
+                print(f"economy [{eco['profile']}]: "
+                      f"${eco['cost_usd_total']:.4f} total"
+                      + (f" (${c1k:.4f}/1k req)" if c1k is not None
+                         else "")
+                      + f", {eco['energy_j_total']:.0f} J"
+                      + (f" ({jpr:.2f} J/req)" if jpr is not None
+                         else "")
+                      + f", {eco['cold_starts']} cold starts, "
+                      f"{eco['preemptions']} preemptions")
 
     report["bundle"] = {"path": bundle_path, "kind": bundle.kind,
                         "obs_spec": bundle.obs_spec,
@@ -335,6 +380,11 @@ def main():
                          "('cells',) mesh (request-level only; --cells "
                          "must divide by N; on CPU requires XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--economy", default=None, choices=PROFILE_NAMES,
+                    help="tier-economy profile (repro.economy): per-tier "
+                         "prices, energy, cold starts, preemption, "
+                         "scale-to-zero — the report gains $-spend and "
+                         "joules figures (request-level only)")
     ap.add_argument("--round-replay", action="store_true",
                     help="compat mode: round-synchronous trace replay "
                          "with round-mean metrics vs the solver oracle")
@@ -355,7 +405,8 @@ def main():
                           slo_target=args.slo_target,
                           canary=args.canary,
                           round_replay=args.round_replay,
-                          mesh_cells=args.mesh_cells)
+                          mesh_cells=args.mesh_cells,
+                          economy=args.economy)
     if args.out:
         report.pop("records", None)  # raw numpy arrays, not JSON
         with open(args.out, "w") as f:

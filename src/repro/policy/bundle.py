@@ -63,6 +63,16 @@ def _validate(bundle: PolicyBundle) -> None:
             f"{bundle.obs_spec!r}; known: {SPEC_NAMES}")
     if bundle.n_max < 1:
         raise BundleError(f"bundle n_max must be >= 1, got {bundle.n_max}")
+    if bundle.kind == "cost_greedy":
+        if "economy" not in bundle.spec().blocks:
+            raise SpecMismatchError(
+                f"cost_greedy bundles route on the 'economy' feature "
+                f"block, absent from spec {bundle.obs_spec!r}; use the "
+                f"'economy' or 'full_economy' variants")
+        if "economy_profile" not in bundle.meta:
+            raise BundleError(
+                "cost_greedy bundle must record its economy profile "
+                "under meta['economy_profile']")
     if bundle.kind == "dqn":
         # the params themselves witness the spec: the first layer's input
         # width must equal the declared spec's feature dim
@@ -138,4 +148,12 @@ def policy_from_bundle(bundle: PolicyBundle) -> tuple[Policy, Any]:
     if bundle.kind == "qtable":
         params = {k: np.asarray(v) for k, v in bundle.params.items()}
         return adapters.qtable_policy(), params
+    if bundle.kind == "cost_greedy":
+        # lazy import: repro.economy itself imports policy adapters
+        from repro.economy import builtin_profile, cost_greedy_policy
+        meta = bundle.meta  # _validate guarantees the profile record
+        profile = builtin_profile(str(meta["economy_profile"]))
+        kw = {k: float(meta[k]) for k in
+              ("lam_cost", "lam_energy", "tick_ms") if k in meta}
+        return cost_greedy_policy(spec, profile, **kw), bundle.params
     raise BundleError(f"unknown policy kind {bundle.kind!r}")

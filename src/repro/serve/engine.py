@@ -53,6 +53,8 @@ from jax.experimental import io_callback
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.economy.tiers import (EconomyProfile, TierEconomyState,
+                                 advance_economy)
 from repro.fleet import latency
 from repro.fleet.env import FleetConfig, FleetState, make_fleet_env
 from repro.fleet.workload import FleetScenario
@@ -73,6 +75,11 @@ TEL_COUNTERS = ("admitted", "dropped", "served", "violated", "attained",
                 "decisions")
 TEL_GAUGES = ("backlog", "queue_depth", "inflight",
               "occ_local", "occ_edge", "occ_cloud")
+# appended when ServeConfig.economy is set: per-window economy events
+# (spend in µ$, energy in mJ — integers, so the audit's conservation law
+# Σ window spend == run spend holds exactly) and tier-state gauges
+ECON_COUNTERS = ("cold_starts", "preemptions", "spend_uusd", "energy_mj")
+ECON_GAUGES = ("warm_tiers", "warming_tiers")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +104,12 @@ class ServeConfig:
     # before the feature existed.
     telemetry: bool = False
     window_ms: float = 1000.0
+    # economy: optional per-tier cost/energy/startup profile
+    # (repro.economy.EconomyProfile).  When set, a TierEconomyState rides
+    # on FleetState.econ and is advanced every tick — cold starts and
+    # preemptions delay recorded service, and µ$/mJ spend accumulates on
+    # device.  economy=None compiles to the exact pre-feature program.
+    economy: Optional[EconomyProfile] = None
 
     @property
     def round_ms(self) -> float:
@@ -109,7 +122,8 @@ class ServeConfig:
                            shared_cloud=self.shared_cloud,
                            shared_edge=self.shared_edge,
                            cell_axis=cell_axis,
-                           cell_axis_size=cell_axis_size)
+                           cell_axis_size=cell_axis_size,
+                           economy=self.economy)
 
 
 class RequestRecords(NamedTuple):
@@ -196,6 +210,10 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig,
     env_init = make_fleet_env(cfg.fleet()) if sharded else env
     n_max, Q = cfg.n_max, cfg.queue_cap
     slot = jnp.arange(n_max)
+    # metric names are fixed at init (they are pytree structure); the
+    # economy series ride in the same buffer when the profile is set
+    counters = TEL_COUNTERS + (ECON_COUNTERS if cfg.economy else ())
+    gauges = TEL_GAUGES + (ECON_GAUGES if cfg.economy else ())
 
     def _expand_tel(tel: MetricBuffer) -> MetricBuffer:
         return MetricBuffer(edges=tel.edges, hist=tel.hist[None],
@@ -222,7 +240,7 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig,
         zi = jnp.full((S, n_requests + 1), -1, jnp.int32)
         tel = None
         if cfg.telemetry:
-            t0 = metrics_init(n_windows, TEL_COUNTERS, TEL_GAUGES)
+            t0 = metrics_init(n_windows, counters, gauges)
             tile = lambda x: jnp.tile(x[None], (S,) + (1,) * x.ndim)
             tel = MetricBuffer(
                 edges=t0.edges, hist=tile(t0.hist),
@@ -323,6 +341,28 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig,
             # -- 4. scatter per-request records for completed rounds --
             fin = done & active
             rec_mask = fin[:, None] & (slot[None, :] < cur_n[:, None])
+            in_round = active[:, None] & (slot[None, :] < cur_n[:, None])
+            service, art = info["times"], info["art"]
+            if cfg.economy is not None:
+                # advance the tier state machine: this tick's decisions
+                # may trigger cold starts (charged to their slot), idle
+                # tiers scale to zero, spot tiers preempt, µ$/mJ accrue
+                key, k_pre = jax.random.split(key)
+                u_cur = jnp.minimum(st.env.user, n_max - 1)
+                econ2, pen, ev = advance_economy(
+                    cfg.economy, st.env.econ, tick_ms=cfg.tick_ms,
+                    action=a, cursor=u_cur, active=active, now=now,
+                    round_start=round_start,
+                    round_actions=info["actions"], in_round=in_round,
+                    rec_mask=rec_mask, times=info["times"], fin=fin,
+                    key=k_pre,
+                    cell_ids=cell0 + jnp.arange(cur_n.shape[0]))
+                env2 = env2._replace(econ=econ2)
+                # completed requests waited out their tier's warmup: the
+                # wait lands in their service latency and the round's ART
+                pen_rec = jnp.where(rec_mask, pen, 0.0)
+                service = service + pen_rec
+                art = art + pen_rec.sum(-1) / n_eff.astype(jnp.float32)
             rid = jnp.where(rec_mask, cur_ids, scratch)
             flat = rid.reshape(-1)
             wait_lanes = round_start[:, None] - stream_t[rid]
@@ -330,9 +370,9 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig,
             rec = rec._replace(
                 wait_ms=rec.wait_ms.at[flat].set(wait_lanes.reshape(-1)),
                 service_ms=rec.service_ms.at[flat].set(
-                    info["times"].reshape(-1)),
+                    service.reshape(-1)),
                 art_ms=rec.art_ms.at[flat].set(
-                    jnp.broadcast_to(info["art"][:, None],
+                    jnp.broadcast_to(art[:, None],
                                      rid.shape).reshape(-1)),
                 served=rec.served.at[flat].set(True),
                 violated=rec.violated.at[flat].set(
@@ -346,7 +386,7 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig,
             if cfg.telemetry:
                 # -- 5. per-window device accumulators (no host sync) --
                 w = window_of(tel, now, cfg.window_ms)
-                e2e = wait_lanes + info["times"]
+                e2e = wait_lanes + service
                 attained = rec_mask & (e2e <= stream_slo[rid] + 1e-6)
                 for name, n in (
                         ("admitted", n_adm), ("dropped", n_drop),
@@ -357,9 +397,15 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig,
                         ("attained", attained.sum())):
                     tel = count_event(tel, name, w, n)
                 tel = observe_values(tel, e2e, rec_mask)
+                if cfg.economy is not None:
+                    # same integers as the run totals — the audit's
+                    # spend/energy conservation laws compare them exactly
+                    for name in ECON_COUNTERS:
+                        tel = count_event(tel, name, w, ev[name])
+                    for name in ECON_GAUGES:
+                        tel = set_gauge(tel, name, w, ev[name])
                 # window-end snapshots of queue/round/tier occupancy;
                 # tiers count this tick's committed slots of active rounds
-                in_round = active[:, None] & (slot[None, :] < cur_n[:, None])
                 acts = info["actions"]
                 decided = in_round & (acts >= 0)
                 for name, g in (
@@ -381,9 +427,9 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig,
                     io_callback(
                         live.on_window, None, w, w2 > w, now,
                         jnp.stack([tel.counters[n][w]
-                                   for n in TEL_COUNTERS]),
+                                   for n in counters]),
                         jnp.stack([tel.gauges[n][w]
-                                   for n in TEL_GAUGES]),
+                                   for n in gauges]),
                         ordered=False)
 
             st2 = EngineState(
@@ -423,7 +469,8 @@ def make_serve_engine(policy: Policy, cfg: ServeConfig,
         # telemetry copies (their leading S axis *is* the mesh axis).
         state_spec = EngineState(
             env=FleetState(key=P(), actions=Pc, user=Pc, charged=Pc,
-                           bg=Pc),
+                           bg=Pc,
+                           econ=(Pc if cfg.economy is not None else None)),
             key=P(), q_ids=Pc, q_head=Pc, q_len=Pc, cur_n=Pc,
             cur_ids=Pc, round_start=Pc, rec=Pc,
             tel=(MetricBuffer(edges=P(), hist=Pc, counters=Pc, gauges=Pc)
@@ -606,6 +653,26 @@ def serve_stream(policy: Policy, params, scenario: FleetScenario,
     report["active_decisions_per_s"] = (active / wall
                                         if active and wall > 0 else None)
     report["records"] = records
+    if cfg.economy is not None:
+        # lifetime per-cell integer totals (µ$ / mJ) summed over the
+        # fleet — the same integers the telemetry windows accumulated,
+        # so the audit's conservation laws compare them exactly
+        econ = state.env.econ
+        tot = lambda v: int(np.asarray(v, np.int64).sum())
+        spend_uusd, energy_mj = tot(econ.spend_uusd), tot(econ.energy_mj)
+        n_served = int(report["served_requests"])
+        report["economy"] = {
+            "profile": cfg.economy.name,
+            "spend_uusd_total": spend_uusd,
+            "cost_usd_total": spend_uusd / 1e6,
+            "energy_j_total": energy_mj / 1e3,
+            "cold_starts": tot(econ.cold_starts),
+            "preemptions": tot(econ.preemptions),
+            "cost_per_1k_requests": (spend_uusd / 1e3 / n_served
+                                     if n_served else None),
+            "joules_per_request": (energy_mj / 1e3 / n_served
+                                   if n_served else None),
+        }
     if cfg.telemetry:
         # shards partition the cells, so counters/histogram sum; gauges
         # are extensive totals except queue_depth, a per-cell mean

@@ -35,9 +35,18 @@ Blocks
                 generalize across constraint levels (cf. Sohaib et al.,
                 arXiv 2402.11743, deadline-conditioned offloading).
                 Width 2.
+``economy``     per-tier economic state from ``repro.economy``: for each
+                of (local, edge, cloud) the startup state
+                (cold/warming/warm), the ticks still needed before the
+                tier can serve, and the routing price ($/request-second,
+                usage + uptime).  Absent economy inputs encode the
+                neutral always-warm-and-free fleet, so economy-blind
+                envs can still build economy-spec observations.
+                Width 3·3 = 9.
 
 Variants (``SPEC_VARIANTS``): ``base`` (Table II only), ``contention``
-(+cloud_load +edge_load), ``constraint`` (+constraint), ``full`` (all).
+(+cloud_load +edge_load), ``constraint`` (+constraint), ``full`` (all),
+``economy`` (base +economy), ``full_economy`` (full +economy).
 
 Encoders consume an ``ObsInputs`` of *semantic* quantities (occupancies,
 committed accuracy, constraint targets) that the env computes; the spec
@@ -60,6 +69,10 @@ LOAD_CAP = 8.0              # cap for the per-cell mean load features
 ACC_NORM = 100.0            # accuracy features are % / 100
 LATENCY_NORM = 1000.0       # latency-target feature is ms / 1000
 DEFAULT_LATENCY_TARGET_MS = 400.0
+# Economy-block normalization: warmup-remaining is clipped at WARMUP_NORM
+# ticks; routing prices ($/request-second) are clipped at ECON_PRICE_NORM.
+WARMUP_NORM = 64.0
+ECON_PRICE_NORM = 0.01
 # Per-cell latency-target pool for procedural fleets (ms), spanning the
 # Table-V optimum range (~70 ms unconstrained to ~500 ms at Max).
 LATENCY_TARGET_POOL = (150.0, 250.0, 400.0, 600.0, 800.0)
@@ -90,6 +103,11 @@ class ObsInputs(NamedTuple):
     edge_group: object    # edge-group mean edge occupancy
     constraint: object    # accuracy threshold (%)
     latency_target: object  # latency target (ms)
+    # economy-block inputs (repro.economy) — None encodes the neutral
+    # always-warm, zero-price fleet, so economy-blind envs stay valid
+    econ_state: object = None       # (3,) int — 0 cold / 1 warming / 2 warm
+    econ_warm_ticks: object = None  # (3,) int — ticks until the tier serves
+    econ_price: object = None       # (3,) float — $/req-s routing price
 
 
 # ------------------------------------------------------------------ blocks
@@ -159,6 +177,32 @@ def _constraint_jnp(x: ObsInputs, n_max: int) -> jnp.ndarray:
                             col(x.latency_target) / LATENCY_NORM], axis=-1)
 
 
+def _economy_np(x: ObsInputs, n_max: int) -> np.ndarray:
+    if x.econ_state is None:
+        out = np.zeros(9)
+        out[0::3] = 1.0  # neutral: every tier warm, instant, free
+        return out
+    st = np.asarray(x.econ_state, float) / 2.0
+    wu = np.minimum(np.asarray(x.econ_warm_ticks, float),
+                    WARMUP_NORM) / WARMUP_NORM
+    pr = np.minimum(np.asarray(x.econ_price, float),
+                    ECON_PRICE_NORM) / ECON_PRICE_NORM
+    return np.stack([st, wu, pr], axis=-1).reshape(-1)
+
+
+def _economy_jnp(x: ObsInputs, n_max: int) -> jnp.ndarray:
+    if x.econ_state is None:
+        n_cells = jnp.asarray(x.user).shape[0]
+        out = jnp.zeros((n_cells, 9), jnp.float32)
+        return out.at[:, 0::3].set(1.0)
+    st = jnp.asarray(x.econ_state).astype(jnp.float32) / 2.0
+    wu = jnp.minimum(jnp.asarray(x.econ_warm_ticks).astype(jnp.float32),
+                     WARMUP_NORM) / WARMUP_NORM
+    pr = jnp.minimum(jnp.asarray(x.econ_price).astype(jnp.float32),
+                     ECON_PRICE_NORM) / ECON_PRICE_NORM
+    return jnp.stack([st, wu, pr], axis=-1).reshape(st.shape[0], -1)
+
+
 @dataclasses.dataclass(frozen=True)
 class Block:
     name: str
@@ -175,6 +219,8 @@ BLOCKS: dict[str, Block] = {
                        _edge_load_np, _edge_load_jnp),
     "constraint": Block("constraint", lambda n: 2,
                         _constraint_np, _constraint_jnp),
+    # 3 tiers × (startup state, ticks-to-warm, routing price)
+    "economy": Block("economy", lambda n: 9, _economy_np, _economy_jnp),
 }
 
 SPEC_VARIANTS: dict[str, tuple[str, ...]] = {
@@ -182,6 +228,9 @@ SPEC_VARIANTS: dict[str, tuple[str, ...]] = {
     "contention": ("base", "cloud_load", "edge_load"),
     "constraint": ("base", "constraint"),
     "full": ("base", "cloud_load", "edge_load", "constraint"),
+    "economy": ("base", "economy"),
+    "full_economy": ("base", "cloud_load", "edge_load", "constraint",
+                     "economy"),
 }
 SPEC_NAMES = tuple(SPEC_VARIANTS)
 

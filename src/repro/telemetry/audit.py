@@ -30,6 +30,14 @@ Checks over a ``serve_stream`` report with telemetry:
   * capacity                backlog ≤ C·queue_cap, queue depth ≤
                             queue_cap, in-flight ≤ C·n_max, and per-tier
                             occupancy sums ≤ in-flight, per window
+  * economy conservation    when the run was served with a tier-economy
+                            profile (``repro.economy``): Σ per-window
+                            spend (µ$) == the run's lifetime spend, and
+                            likewise for energy (mJ), cold starts, and
+                            preemptions — exact integer identities, the
+                            engine adds the same rounded integers to
+                            both instruments; warm+warming tier gauges
+                            stay ≤ 3·C
 
 Checks over a JSONL lifecycle trace (optionally cross-checked against
 the report when the trace is unsampled):
@@ -203,6 +211,40 @@ def audit_serve_report(report: dict, *, trace=None,
         _check(checks, "capacity_bounds", True,
                "skipped (no n_cells/n_max/queue_cap in report config "
                "or arguments)")
+
+    eco = report.get("economy")
+    if eco is not None:
+        # the engine bills in integers (µ$ / mJ) and adds the *same*
+        # rounded per-tick integers to the per-window counters and the
+        # lifetime per-cell totals, so these identities are exact
+        missing = [c for c in ("spend_uusd", "energy_mj", "cold_starts",
+                               "preemptions") if c not in s]
+        if missing:
+            _check(checks, "economy_series_present", False,
+                   f"report has 'economy' but the telemetry series lack "
+                   f"{missing} — the run predates the economy counters "
+                   f"or the buffer was tampered with")
+        else:
+            for win, run, name in (
+                    ("spend_uusd", "spend_uusd_total",
+                     "spend_conservation"),
+                    ("energy_mj", "energy_j_total",
+                     "energy_conservation"),
+                    ("cold_starts", "cold_starts",
+                     "cold_start_conservation"),
+                    ("preemptions", "preemptions",
+                     "preemption_conservation")):
+                wsum = int(np.asarray(s[win], np.int64).sum())
+                total = (round(float(eco[run]) * 1e3)
+                         if run == "energy_j_total" else int(eco[run]))
+                _check(checks, name, wsum == total,
+                       f"Σ {win} windows {wsum} vs run total {total}")
+        if n_cells:
+            tiers = [v for g in ("warm_tiers", "warming_tiers")
+                     for v in s.get(g, []) if v is not None]
+            _check(checks, "tier_state_capacity",
+                   all(v <= 3 * n_cells + 1e-6 for v in tiers),
+                   f"warm/warming tier counts ≤ 3·{n_cells}")
 
     if trace is not None:
         checks.extend(audit_trace(trace, report=report).checks)

@@ -1,0 +1,405 @@
+"""Economy subsystem: tier state machine, cost-aware routing, billing laws.
+
+Acceptance contract of the economy tentpole:
+  * ``economy=None`` is bit-identical to the accounting-only ``local``
+    profile on every per-request record — the feature costs nothing when
+    it only meters
+  * a 1-device cells mesh reproduces the unsharded economy run to 1e-5
+    on records and telemetry, and exactly on the integer billing totals
+  * a request admitted while its only tier is warming never records
+    service before the warmup completes (hypothesis property), and
+    scale-to-zero followed by a burst pays exactly one cold start
+  * the scalarized multi-objective solver is exact (vs full enumeration
+    at n=3) and collapses to the unweighted solver at λ = 0
+  * conservation: Σ per-window spend/energy/cold-start/preemption
+    telemetry equals the run totals, and a tampered window is caught
+  * ``--economy`` + ``--round-replay`` is a hard CLI error
+"""
+import copy
+import dataclasses
+import itertools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.economy import (EconomyProfile, builtin_profile,
+                           cost_greedy_policy, economy_tier_weights,
+                           solve_optimal_economy)
+from repro.env import latency_model as lm
+from repro.env.scenarios import CONSTRAINTS, SCENARIOS
+from repro.fleet import FleetConfig, make_fleet_env, random_fleet
+from repro.fleet.solver import solve_optimal
+from repro.launch.serve_fleet import serve_bundle
+from repro.policy import Policy, heuristic_greedy_policy
+from repro.policy.bundle import (BundleError, PolicyBundle,
+                                 SpecMismatchError, load_bundle,
+                                 policy_from_bundle, save_bundle)
+from repro.serve import (RequestStream, ServeConfig,
+                         poisson_request_stream, serve_stream)
+from repro.sharding.runtime import cells_mesh
+from repro.specs.observation import make_spec
+from repro.telemetry.audit import audit_serve_report
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _pinned_policy(action: int) -> Policy:
+    """Always routes to one action — isolates one tier's state machine."""
+    return Policy(f"pin{action}", lambda key: {},
+                  jax.jit(lambda params, obs, key:
+                          jnp.full((obs.shape[0],), action, jnp.int32)))
+
+
+# ------------------------------------------------------------- off parity
+def test_local_profile_matches_economy_off_bit_for_bit():
+    """The ``local`` profile is accounting-only (free, always-warm): its
+    per-request records are byte-identical to ``economy=None``, spend is
+    zero, and energy is still metered."""
+    n_max, cells = 3, 4
+    scn = random_fleet(jax.random.PRNGKey(21), cells, n_max=n_max)
+    stream = poisson_request_stream(jax.random.PRNGKey(22), scn, 2000.0,
+                                    rate=2.0, round_ms=n_max * 50.0)
+    pol = heuristic_greedy_policy(make_spec("base", n_max))
+    params = pol.init(jax.random.PRNGKey(0))
+    off = serve_stream(pol, params, scn, stream,
+                       ServeConfig(n_max=n_max, quiet=True),
+                       key=jax.random.PRNGKey(1))
+    loc = serve_stream(pol, params, scn, stream,
+                       ServeConfig(n_max=n_max, quiet=True,
+                                   economy=builtin_profile("local")),
+                       key=jax.random.PRNGKey(1))
+    assert "economy" not in off
+    assert off["served_requests"] == loc["served_requests"] > 0
+    for k, v in off["records"].items():
+        np.testing.assert_array_equal(np.asarray(v),
+                                      np.asarray(loc["records"][k]),
+                                      err_msg=f"records[{k}]")
+    assert off["mean_art_ms"] == loc["mean_art_ms"]
+    eco = loc["economy"]
+    assert eco["profile"] == "local"
+    assert eco["spend_uusd_total"] == 0
+    assert eco["cost_usd_total"] == 0.0
+    assert eco["cold_starts"] == 0 and eco["preemptions"] == 0
+    assert eco["energy_j_total"] > 0.0
+    assert eco["joules_per_request"] > 0.0
+    assert eco["cost_per_1k_requests"] == 0.0
+
+
+def test_cost_greedy_free_warm_matches_greedy():
+    """With λ_c = λ_e = 0 under the free always-warm profile the
+    cost-aware router degenerates to the latency-greedy baseline —
+    identical records on the same stream."""
+    n_max, cells = 3, 4
+    local = builtin_profile("local")
+    scfg = ServeConfig(n_max=n_max, obs_spec="economy", quiet=True,
+                       economy=local)
+    spec = scfg.fleet().spec()
+    scn = random_fleet(jax.random.PRNGKey(41), cells, n_max=n_max)
+    stream = poisson_request_stream(jax.random.PRNGKey(42), scn, 2500.0,
+                                    rate=2.0, round_ms=scfg.round_ms)
+    g = heuristic_greedy_policy(spec)
+    c = cost_greedy_policy(spec, local, lam_cost=0.0, lam_energy=0.0,
+                           tick_ms=scfg.tick_ms)
+    rg = serve_stream(g, g.init(jax.random.PRNGKey(0)), scn, stream,
+                      scfg, key=jax.random.PRNGKey(2))
+    rc = serve_stream(c, c.init(jax.random.PRNGKey(0)), scn, stream,
+                      scfg, key=jax.random.PRNGKey(2))
+    assert rg["served_requests"] == rc["served_requests"] > 0
+    for k, v in rg["records"].items():
+        np.testing.assert_array_equal(np.asarray(v),
+                                      np.asarray(rc["records"][k]),
+                                      err_msg=f"records[{k}]")
+    assert rg["slo_attainment"] == rc["slo_attainment"]
+
+
+# --------------------------------------------------------- sharded parity
+def test_one_device_mesh_economy_parity():
+    """An economy serve shard_mapped over a 1-device cells mesh matches
+    the unsharded run: records and telemetry to 1e-5, integer billing
+    totals exactly (preemption draws are keyed by global cell id)."""
+    n_max, cells = 3, 4
+    profile = builtin_profile("spot")
+    scfg = ServeConfig(n_max=n_max, obs_spec="economy", quiet=True,
+                       telemetry=True, economy=profile)
+    scn = random_fleet(jax.random.PRNGKey(31), cells, n_max=n_max)
+    pol = cost_greedy_policy(scfg.fleet().spec(), profile,
+                             tick_ms=scfg.tick_ms)
+    params = pol.init(jax.random.PRNGKey(0))
+    stream = poisson_request_stream(jax.random.PRNGKey(32), scn, 3000.0,
+                                    rate=2.0, round_ms=scfg.round_ms)
+    key = jax.random.PRNGKey(33)
+    r1 = serve_stream(pol, params, scn, stream, scfg, key=key)
+    rm = serve_stream(pol, params, scn, stream, scfg, key=key,
+                      mesh=cells_mesh(1))
+    assert rm["mesh_cells"] == 1
+    assert r1["served_requests"] == rm["served_requests"] > 0
+    for k, v in r1["records"].items():
+        np.testing.assert_allclose(
+            np.asarray(v, np.float64),
+            np.asarray(rm["records"][k], np.float64),
+            atol=1e-5, err_msg=f"records[{k}]")
+    for name, s in r1["telemetry"]["series"].items():
+        a = np.asarray([np.nan if x is None else x for x in s],
+                       np.float64)
+        b = np.asarray([np.nan if x is None else x
+                        for x in rm["telemetry"]["series"][name]],
+                       np.float64)
+        np.testing.assert_allclose(a, b, atol=1e-5, err_msg=name)
+    for k in ("spend_uusd_total", "cold_starts", "preemptions"):
+        assert r1["economy"][k] == rm["economy"][k], k
+    assert abs(r1["economy"]["energy_j_total"]
+               - rm["economy"]["energy_j_total"]) < 1e-9
+
+
+# -------------------------------------------------- cold-start properties
+# One tier (cloud) carries a 5-tick cold start; the profiles are module
+# constants so every hypothesis example reuses the same jit cache.
+_K_COLD = 5
+_COLD_CLOUD = EconomyProfile(
+    name="coldcloud",
+    price_per_req_s=(0.0, 0.0, 1.0e-3),
+    uptime_price_per_s=(0.0, 0.0, 0.0),
+    energy_j_per_req=(1.0, 4.0, 10.0),
+    cold_start_ticks=(0, 0, _K_COLD),
+    preempt_prob=(0.0, 0.0, 0.0),
+    recovery_ticks=(0, 0, 0),
+    idle_timeout_ticks=(0, 0, 0),
+    start_cold=(False, False, True))
+_WARM_CLOUD = dataclasses.replace(_COLD_CLOUD, name="warmcloud",
+                                  start_cold=(False, False, False))
+_SCALE_TO_ZERO = dataclasses.replace(
+    _COLD_CLOUD, name="scale0", cold_start_ticks=(0, 0, 4),
+    idle_timeout_ticks=(0, 0, 4), start_cold=(False, False, False))
+
+
+def _pinned_cloud_burst(t_ms, scfg, seed):
+    scn = random_fleet(jax.random.PRNGKey(seed % 1000), 2, n_max=3)
+    t = np.asarray(t_ms, np.float32)
+    stream = RequestStream(t, np.zeros(t.shape, np.int32),
+                           np.full(t.shape, 1e9, np.float32),
+                           horizon_ms=scfg.n_max * 50.0 * 34,
+                           epoch_ms=scfg.n_max * 50.0 * 34, n_cells=2)
+    pol = _pinned_policy(lm.A_CLOUD)
+    return serve_stream(pol, {}, scn, stream, scfg,
+                        key=jax.random.PRNGKey(1))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None)
+    @given(st.integers(1, 3), st.integers(0, 2 ** 31 - 1))
+    def test_warming_tier_never_serves_before_warmup(n_req, seed):
+        """Every request admitted while its (only) tier is still warming
+        records the full remaining warmup in its service time: at least
+        cold_start·tick on top of the tier's base latency, and exactly
+        cold_start·tick above the identical warm-start run."""
+        tick = 50.0
+        scfg_c = ServeConfig(n_max=3, quiet=True, tick_ms=tick,
+                             economy=_COLD_CLOUD)
+        scfg_w = dataclasses.replace(scfg_c, economy=_WARM_CLOUD)
+        rc = _pinned_cloud_burst(np.zeros(n_req), scfg_c, seed)
+        rw = _pinned_cloud_burst(np.zeros(n_req), scfg_w, seed)
+        assert rc["served_requests"] == n_req == rw["served_requests"]
+        sc = np.asarray(rc["records"]["service_ms"])
+        sw = np.asarray(rw["records"]["service_ms"])
+        # n_req <= 3 < _K_COLD: every decision lands while warming
+        assert np.all(sc >= _K_COLD * tick + lm.T_CLOUD_D0 - 1e-3)
+        np.testing.assert_allclose(sc, sw + _K_COLD * tick, atol=1e-3)
+        assert rc["economy"]["cold_starts"] == 1
+        assert rw["economy"]["cold_starts"] == 0
+
+    @settings(max_examples=5, deadline=None)
+    @given(st.integers(1, 3), st.integers(1, 3),
+           st.integers(0, 2 ** 31 - 1))
+    def test_scale_to_zero_burst_pays_one_cold_start(b1, b2, seed):
+        """Warm tier → idle past the timeout → cold; the next burst pays
+        exactly ONE cold start regardless of its size (subsequent
+        requests see WARMING, not COLD)."""
+        scfg = ServeConfig(n_max=3, quiet=True, tick_ms=50.0,
+                           economy=_SCALE_TO_ZERO)
+        t = np.concatenate([np.zeros(b1), np.full(b2, 2500.0)])
+        rep = _pinned_cloud_burst(t, scfg, seed)
+        assert rep["served_requests"] == b1 + b2
+        assert rep["economy"]["cold_starts"] == 1
+
+
+def test_preemptions_counted_and_audited():
+    """High per-tick preemption with recovery: the run counts
+    preemptions, the per-window telemetry sums to the run total, and the
+    full economy audit (conservation + tier capacity) passes."""
+    n_max, cells = 3, 4
+    profile = EconomyProfile(
+        name="preempty",
+        price_per_req_s=(0.0, 1.0e-4, 1.0e-3),
+        uptime_price_per_s=(0.0, 0.0, 0.0),
+        energy_j_per_req=(1.0, 4.0, 10.0),
+        cold_start_ticks=(0, 2, 2),
+        preempt_prob=(0.0, 0.5, 0.5),
+        recovery_ticks=(0, 3, 3),
+        idle_timeout_ticks=(0, 0, 0))
+    scfg = ServeConfig(n_max=n_max, quiet=True, telemetry=True,
+                       economy=profile)
+    scn = random_fleet(jax.random.PRNGKey(61), cells, n_max=n_max)
+    pol = heuristic_greedy_policy(scfg.fleet().spec())
+    stream = poisson_request_stream(jax.random.PRNGKey(62), scn, 3000.0,
+                                    rate=2.0, round_ms=scfg.round_ms)
+    rep = serve_stream(pol, pol.init(jax.random.PRNGKey(0)), scn, stream,
+                      scfg, key=jax.random.PRNGKey(63))
+    eco = rep["economy"]
+    assert rep["served_requests"] > 0
+    assert eco["preemptions"] > 0
+    assert sum(x or 0 for x in
+               rep["telemetry"]["series"]["preemptions"]) \
+        == eco["preemptions"]
+    audit_serve_report(rep, n_cells=cells, n_max=n_max,
+                       queue_cap=scfg.queue_cap).raise_on_failure()
+
+
+# ---------------------------------------------------------- conservation
+def test_economy_audit_catches_tampered_spend_window():
+    n_max, cells = 3, 4
+    profile = builtin_profile("spot")
+    scfg = ServeConfig(n_max=n_max, obs_spec="economy", quiet=True,
+                       telemetry=True, economy=profile)
+    scn = random_fleet(jax.random.PRNGKey(51), cells, n_max=n_max)
+    pol = cost_greedy_policy(scfg.fleet().spec(), profile,
+                             tick_ms=scfg.tick_ms)
+    stream = poisson_request_stream(jax.random.PRNGKey(52), scn, 3000.0,
+                                    rate=2.0, round_ms=scfg.round_ms)
+    rep = serve_stream(pol, pol.init(jax.random.PRNGKey(0)), scn, stream,
+                       scfg, key=jax.random.PRNGKey(53))
+    res = audit_serve_report(rep, n_cells=cells, n_max=n_max,
+                             queue_cap=scfg.queue_cap)
+    names = [c["check"] for c in res.checks]
+    for want in ("spend_conservation", "energy_conservation",
+                 "cold_start_conservation", "preemption_conservation",
+                 "tier_state_capacity"):
+        assert want in names, want
+    res.raise_on_failure()
+    bad = copy.deepcopy(rep)
+    s = bad["telemetry"]["series"]["spend_uusd"]
+    i = next((j for j, v in enumerate(s) if v), 0)
+    s[i] = (s[i] or 0) + 1
+    res2 = audit_serve_report(bad, n_cells=cells, n_max=n_max,
+                              queue_cap=scfg.queue_cap)
+    assert not res2.ok
+    assert "spend_conservation" in [c["check"] for c in res2.failed]
+
+
+# ---------------------------------------------------------------- solver
+def test_solve_optimal_economy_zero_lambda_is_solver():
+    """λ_c = λ_e = 0 collapses the scalarized solver onto the unweighted
+    exact solver bit-for-bit (actions, ART, objective); the economy
+    extras (dollars, joules) still report."""
+    scn = random_fleet(jax.random.PRNGKey(3), 4, n_max=6)
+    profile = builtin_profile("spot")
+    for i in range(4):
+        scenario, constraint, n = scn.cell(i)
+        base = solve_optimal(scenario, constraint, n)
+        eco = solve_optimal_economy(scenario, constraint, n, profile,
+                                    lam_cost=0.0, lam_energy=0.0)
+        np.testing.assert_array_equal(eco["actions"], base["actions"])
+        assert eco["art"] == base["art"]
+        assert eco["objective"] == base["objective"]
+        assert eco["energy_j"] > 0.0
+        assert eco["cost_usd"] >= 0.0
+
+
+def test_solver_economy_weights_exact_vs_enumeration():
+    """The tier-weighted solver is exact: at n=3, full enumeration of all
+    10³ joint actions under the scalarized objective (weak-network
+    penalties unscaled, feasibility on the integer accuracy grid) finds
+    the same optimum."""
+    scale, offset = economy_tier_weights(builtin_profile("spot"))
+    n = 3
+    tenth = np.round(np.asarray(lm.ACCURACY) * 10).astype(np.int64)
+    for sname in ("A", "B", "D"):
+        scenario = SCENARIOS[sname]
+        sc = scenario.for_users(n)
+        we_e = lm.WEAK_E_EDGE if sc.weak_e else 0.0
+        we_c = lm.WEAK_E_CLOUD if sc.weak_e else 0.0
+        for cname in ("Min", "85%", "Max"):
+            constraint = CONSTRAINTS[cname]
+            best = math.inf
+            for acts in itertools.product(range(lm.N_ACTIONS), repeat=n):
+                k_e = sum(a == lm.A_EDGE for a in acts)
+                k_c = sum(a == lm.A_CLOUD for a in acts)
+                acc = (sum(int(tenth[a]) for a in acts
+                           if a < lm.N_MODELS)
+                       + (k_e + k_c) * int(tenth[0]))
+                if acc < (constraint - 1e-9) * n * 10 - 1e-6:
+                    continue
+                obj = (sum(lm.T_LOCAL[a] * scale[0] + offset[0]
+                           for a in acts if a < lm.N_MODELS)
+                       + k_e * (lm.T_EDGE_D0 * max(1, k_e) * scale[1]
+                                + we_e + offset[1])
+                       + k_c * (lm.T_CLOUD_D0 * max(1, k_c) * scale[2]
+                                + we_c + offset[2]))
+                best = min(best, obj)
+            r = solve_optimal(scenario, constraint, n,
+                              tier_scale=scale, tier_offset=offset)
+            assert math.isfinite(best), (sname, cname)
+            assert abs(r["objective"] - best) < 1e-6 * max(1.0, best), \
+                (sname, cname, r["objective"], best)
+
+
+# ---------------------------------------------------------------- bundle
+def test_cost_greedy_bundle_roundtrip(tmp_path):
+    n_max = 3
+    profile = builtin_profile("spot")
+    pol = cost_greedy_policy(make_spec("economy", n_max), profile)
+    bundle = PolicyBundle(kind="cost_greedy", obs_spec="economy",
+                          n_max=n_max,
+                          params=pol.init(jax.random.PRNGKey(0)),
+                          meta={"economy_profile": "spot",
+                                "lam_cost": 750.0})
+    path = str(tmp_path / "cg.bundle.msgpack")
+    save_bundle(path, bundle)
+    pol2, params = policy_from_bundle(load_bundle(path,
+                                                  expect_spec="economy"))
+    assert pol2.kind == "cost_greedy"
+    scn = random_fleet(jax.random.PRNGKey(1), 4, n_max=n_max)
+    fns = make_fleet_env(FleetConfig(n_max=n_max, obs_spec="economy",
+                                     quiet=True, economy=profile))
+    obs = fns.observe(scn, fns.init(jax.random.PRNGKey(2), scn))
+    a = pol2.act(pol2.refresh(params, scn), obs, jax.random.PRNGKey(3))
+    assert a.shape == (4,) and a.dtype == jnp.int32
+    assert 0 <= int(a.min()) and int(a.max()) < lm.N_ACTIONS
+
+
+def test_cost_greedy_bundle_validation(tmp_path):
+    pol = cost_greedy_policy(make_spec("economy", 3),
+                             builtin_profile("spot"))
+    params = pol.init(jax.random.PRNGKey(0))
+    path = str(tmp_path / "bad.bundle.msgpack")
+    with pytest.raises(BundleError, match="economy profile"):
+        save_bundle(path, PolicyBundle(kind="cost_greedy",
+                                       obs_spec="economy", n_max=3,
+                                       params=params))
+    with pytest.raises(SpecMismatchError, match="economy"):
+        save_bundle(path, PolicyBundle(
+            kind="cost_greedy", obs_spec="base", n_max=3, params=params,
+            meta={"economy_profile": "spot"}))
+    with pytest.raises(ValueError, match="economy"):
+        cost_greedy_policy(make_spec("base", 3), builtin_profile("spot"))
+
+
+# ------------------------------------------------------------------- CLI
+def test_serve_bundle_rejects_economy_with_round_replay(tmp_path):
+    pol = heuristic_greedy_policy(make_spec("base", 3))
+    path = str(tmp_path / "g.bundle.msgpack")
+    save_bundle(path, PolicyBundle(kind="greedy", obs_spec="base",
+                                   n_max=3,
+                                   params=pol.init(jax.random.PRNGKey(0))))
+    with pytest.raises(SystemExit, match="round-replay"):
+        serve_bundle(path, economy="spot", round_replay=True, rounds=2,
+                     cells=2, verbose=False)
+    with pytest.raises(SystemExit, match="unknown economy profile"):
+        serve_bundle(path, economy="mainframe", rounds=2, cells=2,
+                     verbose=False)

@@ -430,6 +430,7 @@ def test_history_tier1_metrics_resolve_in_bench_schemas():
     a renamed figure silently disables its gate otherwise."""
     serve_like = {"request_decisions_per_s": 1.0,
                   "sharded_request_decisions_per_s": 1.5,
+                  "cost_per_1k_requests": 0.06,
                   "policies": {"greedy": {"p99_latency_ms": 2.0,
                                           "slo_attainment": 0.9}}}
     for metric, _, _ in history.TIER1["serve"]:
