@@ -1,0 +1,37 @@
+"""Static analysis of the repo's compiled programs and source tree.
+
+Two layers, one gate (``python -m repro.analysis``):
+
+**Layer 1 — program contracts** (:mod:`repro.analysis.contracts`,
+:mod:`repro.analysis.registry`).  Every jit entrypoint in the system —
+the serve-engine tick and its cells-mesh shard_map variant, the hltrain
+session scan, the exact-solver oracle, the orchestration and compute
+Pallas kernels, the economy tier-machine advance — is abstractly traced
+to a jaxpr and lowered to HLO (no device execution) and distilled into a
+:class:`~repro.analysis.contracts.ProgramContract`: its collective
+inventory (count/kind/axis of every ``psum``/``all_gather``), its host
+callbacks (only the live-emitter lanes are whitelisted), its dtype
+inventory (f64 on device is banned; billing stays integer), whether its
+declared ``donate_argnums`` really produce input/output buffer aliasing,
+any large baked-in constants, and retrace stability.  Contracts are
+committed to ``results/analysis_contracts.json``; ``--check`` fails on
+undeclared drift, ``--update`` re-baselines intentionally.  The per-
+program psum-on-``cells`` counts are the before/after measurement for
+the ROADMAP's collective-fusion item.
+
+**Layer 2 — repo lint** (:mod:`repro.analysis.lint`).  Repo-specific AST
+rules over ``src/``: no host time / ``datetime`` / ``np.random`` reachable
+from jit-decorated code, no bare ``np.`` ops inside traced functions,
+``REPRO_*`` environment flags only through the strict
+:mod:`repro.analysis.envflags` helpers (and boolean flags only at module
+scope), and jit-static config dataclasses frozen.  Per-rule inline
+suppressions: ``# repro-lint: allow=<rule-id>``.
+
+This package's import surface is deliberately light (the ``envflags``
+helpers are imported at module scope by ``repro.fleet.latency`` and the
+kernel modules); the jax-heavy contract machinery lives in submodules
+imported on demand.
+"""
+from repro.analysis.envflags import bool_flag, path_flag  # noqa: F401
+
+__all__ = ["bool_flag", "path_flag"]

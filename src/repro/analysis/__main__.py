@@ -1,0 +1,134 @@
+"""``python -m repro.analysis`` — the static-analysis gate.
+
+    --check            trace the registry, run policy checks + entry
+                       checks, diff against the committed baseline
+                       (results/analysis_contracts.json); exit 1 and name
+                       the drifted contract on any problem  [default]
+    --update           re-trace and rewrite the baseline (declare an
+                       intentional contract change)
+    --lint             run the AST lint over src/ as well
+    --only a,b,c       restrict tracing to the named registry entries
+                       (used by the CI smoke jobs to assert the baseline
+                       matches what the benchmarks actually compile)
+    --baseline PATH    baseline file location (default
+                       results/analysis_contracts.json)
+
+``--check`` on a clean tree prints one line per contract and exits 0.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_BASELINE = "results/analysis_contracts.json"
+BASELINE_VERSION = 1
+
+
+def load_baseline(path) -> dict | None:
+    p = Path(path)
+    if not p.exists():
+        return None
+    doc = json.loads(p.read_text())
+    if doc.get("version") != BASELINE_VERSION:
+        raise ValueError(f"{path}: baseline version "
+                         f"{doc.get('version')!r} != {BASELINE_VERSION} "
+                         f"— re-run --update")
+    return doc["contracts"]
+
+
+def save_baseline(path, current: dict) -> None:
+    doc = {"version": BASELINE_VERSION,
+           "contracts": {n: c.to_dict() for n, c in sorted(current.items())}}
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+
+
+def main(argv=None, entries=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="compiled-program contract checker + repo lint gate")
+    ap.add_argument("--check", action="store_true",
+                    help="check contracts against the baseline (default)")
+    ap.add_argument("--update", action="store_true",
+                    help="re-baseline the contracts")
+    ap.add_argument("--lint", action="store_true",
+                    help="also run the AST lint over --lint-path")
+    ap.add_argument("--lint-only", action="store_true",
+                    help="run only the lint (skip contract tracing)")
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated registry entry names")
+    ap.add_argument("--baseline", type=str, default=DEFAULT_BASELINE)
+    ap.add_argument("--lint-path", type=str, default="src")
+    args = ap.parse_args(argv)
+
+    problems = []
+    if args.lint or args.lint_only:
+        from repro.analysis.lint import lint_paths
+        findings = lint_paths([args.lint_path])
+        for f in findings:
+            print(f.format())
+        problems.extend(f.format() for f in findings)
+        print(f"lint: {len(findings)} finding(s) over {args.lint_path}/")
+        if args.lint_only:
+            return 1 if problems else 0
+
+    # tracing imports jax and the whole serving stack — deferred so
+    # --lint-only stays fast
+    from repro.analysis import registry as reg
+    entries = reg.ENTRIES if entries is None else entries
+    only = args.only.split(",") if args.only else None
+    current = reg.trace_all(only, entries)
+    for name in sorted(current):
+        c = current[name]
+        print(f"  {name}: psum[cells]={c.psum_cells} "
+              f"callbacks={c.callbacks or '-'} "
+              f"donated={c.donated['declared'] or '-'}"
+              f"/{c.donated['aliased_outputs']} "
+              f"eqns={c.n_eqns} stable={c.retrace_stable}")
+
+    if args.update:
+        if only:
+            print("--update ignores --only (the baseline is always "
+                  "complete); re-run without --only", file=sys.stderr)
+            return 2
+        # policy problems block an --update too: you cannot baseline an
+        # f64 op or a rogue callback into legitimacy
+        from repro.analysis.contracts import contract_problems
+        from repro.telemetry.live import CALLBACK_WHITELIST
+        for c in current.values():
+            problems.extend(contract_problems(
+                c, callback_whitelist=CALLBACK_WHITELIST))
+        if problems:
+            for m in problems:
+                print(f"FAIL {m}", file=sys.stderr)
+            return 1
+        save_baseline(args.baseline, current)
+        print(f"baseline updated: {args.baseline} "
+              f"({len(current)} contracts)")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    if baseline is None:
+        problems.append(f"no committed baseline at {args.baseline} — "
+                        f"run --update and commit the file")
+        current_problems = []
+    else:
+        current_problems = reg.run_check(current, baseline, entries,
+                                         partial=only is not None)
+    problems.extend(current_problems)
+    if problems:
+        for m in problems:
+            print(f"FAIL {m}", file=sys.stderr)
+        print(f"analysis gate: {len(problems)} problem(s)",
+              file=sys.stderr)
+        return 1
+    print(f"analysis gate OK: {len(current)} contract(s) match "
+          f"{args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

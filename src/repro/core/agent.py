@@ -38,7 +38,7 @@ from repro.policy.adapters import dqn_policy
 from repro.policy.api import act_single
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class HLHyperParams:
     epochs: int = 60
     n_direct: int = 8        # direct-RL sessions per epoch (before α scaling)

@@ -95,7 +95,7 @@ class DQLAgent:
         return res
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class QLHyperParams:
     lr: float = 0.15
     gamma: float = 1.0

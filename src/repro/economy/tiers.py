@@ -74,6 +74,26 @@ class EconomyProfile:
     idle_timeout_ticks: tuple  # warm ticks with no traffic → COLD (0 = never)
     start_cold: tuple = (False, False, False)
 
+    def __post_init__(self):
+        """A profile is a jit-static argument: every per-tier field must
+        be a 3-tuple of plain scalars, or the first trace dies on an
+        unhashable static (and a list mutated between traces would
+        recompile every call — exactly what the analysis retrace check
+        hunts).  Reject the bad shape here, at construction."""
+        for f in dataclasses.fields(self):
+            if f.name == "name":
+                continue
+            v = getattr(self, f.name)
+            if not isinstance(v, tuple) or len(v) != N_TIERS:
+                raise TypeError(
+                    f"EconomyProfile.{f.name} must be a {N_TIERS}-tuple "
+                    f"(local, edge, cloud), got {v!r}")
+            if not all(isinstance(x, (int, float, bool)) for x in v):
+                raise TypeError(
+                    f"EconomyProfile.{f.name} entries must be plain "
+                    f"int/float/bool scalars (hashable, jit-static), "
+                    f"got {v!r}")
+
     def route_price(self) -> tuple:
         """Effective $/request-second a router should weigh: usage price
         plus the uptime price the busy instance burns meanwhile."""

@@ -41,7 +41,7 @@ PENALTY_PER_PCT = 2.0
 REWARD_SCALE = 100.0
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class EnvConfig:
     scenario: Scenario
     constraint: float  # accuracy threshold in %
@@ -58,7 +58,9 @@ class EnvConfig:
     latency_target: float = DEFAULT_LATENCY_TARGET_MS
 
     def __post_init__(self):
-        self.scenario = self.scenario.for_users(self.n_users)
+        # frozen dataclass: normalize at construction via object.__setattr__
+        object.__setattr__(self, "scenario",
+                           self.scenario.for_users(self.n_users))
 
 
 class EdgeCloudEnv:
@@ -194,17 +196,17 @@ class EdgeCloudEnv:
         """One quiet round under a ``repro.policy`` Policy (the same
         ``act(params, obs, key)`` protocol the fleet evaluator and the
         serving gateway drive). Returns the terminal info dict."""
-        saved = (self.bg, self.user, self.actions.copy(),
-                 self.cfg.quiet)
-        self.cfg.quiet = True
+        saved = (self.bg, self.user, self.actions.copy(), self.cfg)
+        # the config is frozen (it doubles as a hashable jit-static
+        # elsewhere): swap in a quiet copy, restore the original after
+        self.cfg = dataclasses.replace(self.cfg, quiet=True)
         self.reset()
         obs = self.observe()
         info = {}
         for _ in range(self.n):
             a = act_single(policy, params, obs)
             obs, r, done, info = self.step(a)
-        self.cfg.quiet = saved[3]
-        self.bg, self.user, self.actions = saved[0], saved[1], saved[2]
+        self.bg, self.user, self.actions, self.cfg = saved
         return info
 
 

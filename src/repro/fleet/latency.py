@@ -17,11 +17,10 @@ same fleet).  ``mask=None`` is exactly the reference semantics.
 """
 from __future__ import annotations
 
-import os
-
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import envflags
 from repro.env import latency_model as lm
 
 N_MODELS = lm.N_MODELS
@@ -30,8 +29,10 @@ A_EDGE, A_CLOUD = lm.A_EDGE, lm.A_CLOUD
 
 # The fused Pallas group-occupancy kernel is the default path; set
 # REPRO_ORCH_KERNELS=0 to fall back to the segment_sum reference
-# (diagnostic escape hatch, parity-tested identical).
-USE_KERNELS = os.environ.get("REPRO_ORCH_KERNELS", "1") != "0"
+# (diagnostic escape hatch, parity-tested identical).  Strictly parsed:
+# only "0"/"1" are accepted — a typoed value raises at import instead of
+# silently picking a kernel path.
+USE_KERNELS = envflags.bool_flag(envflags.ORCH_KERNELS, True)
 
 
 def group_slot_mask(groups: jnp.ndarray) -> jnp.ndarray:

@@ -143,7 +143,7 @@ def _where_tree(pred, new, old):
     return jax.tree.map(lambda n, o: jnp.where(pred, n, o), new, old)
 
 
-def session_schedule(hp: FleetHLParams) -> dict:
+def session_schedule(hp: FleetHLParams) -> dict:  # repro-lint: allow=np-in-traced — deliberate host-side f64: the jit-static schedule must round bit-identically to the Python HLAgent loop
     """Per-epoch α-scaled session counts, max(1, round(frac · n)), computed
     host-side in float64 so they match the Python ``HLAgent`` loop's
     ``int(round(...))`` bit-for-bit (f32 rounding diverges at the exact

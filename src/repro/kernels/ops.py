@@ -10,11 +10,14 @@ import functools
 
 import jax
 
+from repro.analysis import envflags
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssd import ssd_pallas
 from repro.kernels.wkv6 import wkv6_pallas
 
-INTERPRET = True
+# strict flag: REPRO_PALLAS_INTERPRET=0 lowers to Mosaic, =1 (default
+# here: CPU-only container) interprets; anything else raises at import
+INTERPRET = envflags.bool_flag(envflags.PALLAS_INTERPRET, True)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "q_blk",

@@ -34,9 +34,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-# CPU-only container default; a TPU deployment flips this (or passes
-# interpret=False) and the same kernels lower to Mosaic.
-INTERPRET = True
+from repro.analysis import envflags
+
+# CPU-only container default; a TPU deployment flips this via
+# REPRO_PALLAS_INTERPRET=0 (or passes interpret=False) and the same
+# kernels lower to Mosaic.  Shared with repro.kernels.ops.
+INTERPRET = envflags.bool_flag(envflags.PALLAS_INTERPRET, True)
 
 _GO_BLK = 128
 

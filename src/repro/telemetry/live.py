@@ -54,8 +54,15 @@ import numpy as np
 
 __all__ = [
     "NdjsonSink", "open_sink", "BurnRateConfig", "BurnRateAlerter",
-    "LiveEmitter", "TrainLiveEmitter",
+    "LiveEmitter", "TrainLiveEmitter", "CALLBACK_WHITELIST",
 ]
+
+# The only host functions a compiled program may call back into: the
+# live-emitter window/epoch lanes below.  repro.analysis traces every
+# jit entrypoint and fails its contract check on any io_callback whose
+# target is not in this set — add a name here (and a lane that deserves
+# it) before wiring a new callback into a traced scan.
+CALLBACK_WHITELIST = frozenset({"on_window", "on_epoch"})
 
 
 class NdjsonSink:

@@ -27,7 +27,9 @@ import time
 
 import jax
 
-PROFILE_DIR_ENV = "REPRO_PROFILE_DIR"
+from repro.analysis import envflags
+
+PROFILE_DIR_ENV = envflags.PROFILE_DIR
 
 
 def device_peak_memory_bytes() -> int | None:
@@ -49,7 +51,7 @@ def host_peak_rss_bytes() -> int:
 
 
 @dataclasses.dataclass
-class Profile:
+class Profile:  # repro-lint: allow=unfrozen-config-dataclass — host-side stopwatch, never a jit-static argument
     label: str
     compile_time_s: float | None = None
     run_time_s: float | None = None
@@ -93,7 +95,7 @@ def profiled(label: str = "run", trace_dir: str | None = None):
     caller invokes after the compile-bearing first call; on exit the
     timing/memory fields are final.  A jax profiler trace of the block is
     written when ``trace_dir`` or ``$REPRO_PROFILE_DIR`` is set."""
-    trace_dir = trace_dir or os.environ.get(PROFILE_DIR_ENV)
+    trace_dir = trace_dir or envflags.path_flag(PROFILE_DIR_ENV)
     prof = Profile(label)
     ctx = (jax.profiler.trace(os.path.join(trace_dir, label))
            if trace_dir else contextlib.nullcontext())

@@ -1,0 +1,310 @@
+"""Layer-2 acceptance: the AST lint's rules, suppressions, scope-aware
+traced-set inference — and the clean-tree property of ``src/`` itself."""
+import importlib
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import envflags
+from repro.analysis.lint import RULES, lint_paths, lint_source
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+
+
+def _lint(code: str):
+    return lint_source(textwrap.dedent(code), "toy.py")
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# each rule fires
+
+
+class TestRules:
+    def test_host_time_in_jit(self):
+        fs = _lint("""
+            import time, jax
+
+            @jax.jit
+            def f(x):
+                return x + time.time()
+        """)
+        assert _rules(fs) == ["host-time-in-jit"]
+
+    def test_np_random_in_traced_arg(self):
+        # traced via being handed by name to jax.jit, not via decorator
+        fs = _lint("""
+            import jax
+            import numpy as np
+
+            def body(x):
+                return x + np.random.random()
+
+            step = jax.jit(body)
+        """)
+        # np.random.* is both a host-RNG hazard and a bare np. use; the
+        # RNG rule is the one that must fire
+        assert "host-time-in-jit" in _rules(fs)
+
+    def test_np_in_traced(self):
+        fs = _lint("""
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def f(x):
+                return np.round(x)
+        """)
+        assert _rules(fs) == ["np-in-traced"]
+
+    def test_np_in_call_edge_closure(self):
+        # helper called by name from a jitted fn is traced transitively
+        fs = _lint("""
+            import jax
+            import numpy as np
+
+            def helper(x):
+                return np.asarray(x)
+
+            @jax.jit
+            def f(x):
+                return helper(x)
+        """)
+        assert _rules(fs) == ["np-in-traced"]
+
+    def test_np_in_nested_def(self):
+        fs = _lint("""
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def f(x):
+                def inner(y):
+                    return np.abs(y)
+                return inner(x)
+        """)
+        assert _rules(fs) == ["np-in-traced"]
+
+    @pytest.mark.parametrize("read", [
+        'os.environ.get("REPRO_FOO")',
+        'os.getenv("REPRO_FOO", "1")',
+        'os.environ["REPRO_FOO"]',
+    ])
+    def test_raw_env_flag(self, read):
+        fs = _lint(f"""
+            import os
+            FLAG = {read}
+        """)
+        assert _rules(fs) == ["raw-env-flag"]
+
+    def test_non_repro_env_reads_pass(self):
+        fs = _lint("""
+            import os
+            HOME = os.environ.get("HOME")
+        """)
+        assert fs == []
+
+    def test_env_flag_scope(self):
+        fs = _lint("""
+            from repro.analysis import envflags
+
+            def f():
+                return envflags.bool_flag(envflags.ORCH_KERNELS, True)
+        """)
+        assert _rules(fs) == ["env-flag-scope"]
+
+    def test_module_scope_bool_flag_passes(self):
+        fs = _lint("""
+            from repro.analysis import envflags
+            USE = envflags.bool_flag(envflags.ORCH_KERNELS, True)
+        """)
+        assert fs == []
+
+    def test_unfrozen_config_dataclass(self):
+        fs = _lint("""
+            import dataclasses
+
+            @dataclasses.dataclass
+            class ToyConfig:
+                x: int = 0
+        """)
+        assert _rules(fs) == ["unfrozen-config-dataclass"]
+
+    def test_frozen_config_passes(self):
+        fs = _lint("""
+            import dataclasses
+
+            @dataclasses.dataclass(frozen=True)
+            class ToyParams:
+                x: int = 0
+        """)
+        assert fs == []
+
+    def test_non_config_name_unconstrained(self):
+        fs = _lint("""
+            import dataclasses
+
+            @dataclasses.dataclass
+            class Stopwatch:
+                t: float = 0.0
+        """)
+        assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+
+
+class TestSuppressions:
+    def test_line_level(self):
+        fs = _lint("""
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def f(x):
+                return np.round(x)  # repro-lint: allow=np-in-traced
+        """)
+        assert fs == []
+
+    def test_wrong_rule_id_does_not_suppress(self):
+        fs = _lint("""
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def f(x):
+                return np.round(x)  # repro-lint: allow=host-time-in-jit
+        """)
+        assert _rules(fs) == ["np-in-traced"]
+
+    def test_def_line_covers_whole_function(self):
+        fs = _lint("""
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def f(x):  # repro-lint: allow=np-in-traced
+                y = np.round(x)
+                return np.abs(y)
+        """)
+        assert fs == []
+
+    def test_def_line_covers_nested_defs(self):
+        fs = _lint("""
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def f(x):  # repro-lint: allow=np-in-traced
+                def inner(y):
+                    return np.abs(y)
+                return inner(x)
+        """)
+        assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# scope-aware traced-set inference
+
+
+class TestScopeResolution:
+    def test_same_named_defs_not_conflated(self):
+        # two factory closures each define `act`; only one is jitted —
+        # the host-side one may use numpy freely
+        fs = _lint("""
+            import jax
+            import numpy as np
+
+            def jitted_factory():
+                @jax.jit
+                def act(params, obs):
+                    return obs * 2
+                return act
+
+            def host_factory():
+                def act(params, obs):
+                    return int(np.argmax(obs))
+                return act
+        """)
+        assert fs == []
+
+    def test_tracer_arg_resolved_in_enclosing_scope(self):
+        fs = _lint("""
+            import jax
+            import numpy as np
+
+            def factory():
+                def act(obs):
+                    return np.argmax(obs)
+                return jax.jit(act)
+        """)
+        assert _rules(fs) == ["np-in-traced"]
+
+
+# ---------------------------------------------------------------------------
+# the tree itself is clean, and envflags parse strictly
+
+
+class TestRepoGate:
+    def test_src_tree_is_clean(self):
+        findings = lint_paths([str(SRC)])
+        assert findings == [], "\n".join(f.format() for f in findings)
+
+    def test_rule_registry_matches_docs(self):
+        assert len(RULES) == 5
+        assert set(RULES) == {
+            "host-time-in-jit", "np-in-traced", "raw-env-flag",
+            "env-flag-scope", "unfrozen-config-dataclass"}
+
+
+class TestEnvFlags:
+    def test_bool_flag_unset_returns_default(self, monkeypatch):
+        monkeypatch.delenv(envflags.ORCH_KERNELS, raising=False)
+        assert envflags.bool_flag(envflags.ORCH_KERNELS, True) is True
+        assert envflags.bool_flag(envflags.ORCH_KERNELS, False) is False
+
+    def test_bool_flag_accepts_exactly_0_and_1(self, monkeypatch):
+        monkeypatch.setenv(envflags.ORCH_KERNELS, "0")
+        assert envflags.bool_flag(envflags.ORCH_KERNELS, True) is False
+        monkeypatch.setenv(envflags.ORCH_KERNELS, "1")
+        assert envflags.bool_flag(envflags.ORCH_KERNELS, False) is True
+
+    @pytest.mark.parametrize("bad", ["yes", "true", "on", " 1", ""])
+    def test_bool_flag_rejects_everything_else(self, monkeypatch, bad):
+        monkeypatch.setenv(envflags.ORCH_KERNELS, bad)
+        with pytest.raises(ValueError, match=envflags.ORCH_KERNELS):
+            envflags.bool_flag(envflags.ORCH_KERNELS, True)
+
+    def test_path_flag(self, monkeypatch, tmp_path):
+        monkeypatch.delenv(envflags.PROFILE_DIR, raising=False)
+        assert envflags.path_flag(envflags.PROFILE_DIR) is None
+        monkeypatch.setenv(envflags.PROFILE_DIR, str(tmp_path))
+        assert envflags.path_flag(envflags.PROFILE_DIR) == str(tmp_path)
+        monkeypatch.setenv(envflags.PROFILE_DIR, "  ")
+        with pytest.raises(ValueError, match="empty"):
+            envflags.path_flag(envflags.PROFILE_DIR)
+        f = tmp_path / "a.txt"
+        f.write_text("x")
+        monkeypatch.setenv(envflags.PROFILE_DIR, str(f))
+        with pytest.raises(ValueError, match="not a directory"):
+            envflags.path_flag(envflags.PROFILE_DIR)
+
+    def test_latency_use_kernels_strict_reload(self, monkeypatch):
+        import repro.fleet.latency as latency
+        try:
+            monkeypatch.setenv(envflags.ORCH_KERNELS, "0")
+            assert importlib.reload(latency).USE_KERNELS is False
+            monkeypatch.setenv(envflags.ORCH_KERNELS, "1")
+            assert importlib.reload(latency).USE_KERNELS is True
+            monkeypatch.setenv(envflags.ORCH_KERNELS, "maybe")
+            with pytest.raises(ValueError, match="maybe"):
+                importlib.reload(latency)
+        finally:
+            monkeypatch.delenv(envflags.ORCH_KERNELS, raising=False)
+            importlib.reload(latency)
+        assert latency.USE_KERNELS is True
